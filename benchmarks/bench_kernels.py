@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: us/call of the coded encode/decode contraction
+and the serving hot spots (jnp path on CPU; the Pallas kernels target TPU
+and are validated in interpret mode by tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import berrut
+from repro.core.berrut import CodingConfig
+from repro.kernels import ref
+
+
+def run(emit=common.emit):
+    rng = np.random.RandomState(0)
+    cfg = CodingConfig(k=8, s=1)
+    w = berrut.encode_matrix(cfg)
+    for f_dim in (4096, 65536):
+        x = jnp.asarray(rng.randn(4, 8, f_dim), jnp.float32)
+        apply_fn = jax.jit(lambda ww, xx: ref.berrut_apply_ref(ww, xx))
+        _, us = common.timed(apply_fn, w, x)
+        gb = (x.nbytes + x.nbytes * 9 / 8) / 1e9
+        emit(f"bench_kernels/berrut_encode_f{f_dim}", us,
+             f"approx_GBps={gb / (us / 1e6):.1f}")
+
+    q = jnp.asarray(rng.randn(8, 8, 64), jnp.float32)
+    kc = jnp.asarray(rng.randn(8, 4096, 2, 64), jnp.float32)
+    vc = jnp.asarray(rng.randn(8, 4096, 2, 64), jnp.float32)
+    valid = jnp.ones((8, 4096), bool)
+    dec = jax.jit(lambda *a: ref.decode_attention_ref(*a))
+    _, us = common.timed(dec, q, kc, vc, valid)
+    emit("bench_kernels/decode_attention_w4096", us,
+         f"cache_MB={kc.nbytes * 2 / 1e6:.0f}")
+
+    x = jnp.asarray(rng.randn(2, 512, 8, 32), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.randn(2, 512, 8), jnp.float32)) * 0.1
+    a_log = jnp.zeros((8,))
+    b = jnp.asarray(rng.randn(2, 512, 16), jnp.float32)
+    c = jnp.asarray(rng.randn(2, 512, 16), jnp.float32)
+    d = jnp.ones((8,))
+    ssd = jax.jit(lambda *a: ref.ssd_chunked_ref(*a, chunk=128)[0])
+    _, us = common.timed(ssd, x, dt, a_log, b, c, d)
+    emit("bench_kernels/ssd_chunked_s512", us, "chunk=128")
+    return True
+
+
+if __name__ == "__main__":
+    run()

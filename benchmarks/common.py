@@ -1,0 +1,107 @@
+"""Shared benchmark harness: trained base model + parity models, cached.
+
+The paper's accuracy experiments run against pretrained CIFAR/MNIST
+classifiers; offline we train an MLP on the synthetic Gaussian-cluster
+task to high base accuracy and reuse it across all figures (cached on
+disk so ``python -m benchmarks.run`` is reproducible end to end).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load, save
+from repro.data import SyntheticClassification
+from repro.models.classifier import (ClassifierConfig, accuracy,
+                                     classifier_apply, init_classifier,
+                                     train_classifier, train_parity_model)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+CACHE = os.path.join(RESULTS_DIR, "trained_models")
+
+CLS_CFG = ClassifierConfig(dim=64, hidden=256, depth=2, num_classes=10)
+N_TRAIN, N_TEST = 20_000, 4_000
+
+
+@functools.lru_cache(maxsize=1)
+def dataset():
+    task = SyntheticClassification(num_classes=10, dim=64, scatter=2.2,
+                                   seed=0)
+    (xtr, ytr), (xte, yte) = task.train_test(N_TRAIN, N_TEST, seed=1)
+    return xtr, ytr, xte, yte
+
+
+@functools.lru_cache(maxsize=1)
+def base_model():
+    """Trained base classifier f (cached)."""
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, "base")
+    xtr, ytr, xte, yte = dataset()
+    template = init_classifier(CLS_CFG, jax.random.PRNGKey(0))
+    if os.path.exists(path + ".npz"):
+        params = load(path, template)
+        params = jax.tree.map(jnp.asarray, params)
+    else:
+        params, _ = train_classifier(CLS_CFG, xtr, ytr, steps=500)
+        save(path, params)
+    return params
+
+
+@functools.lru_cache(maxsize=None)
+def parity_model(k: int):
+    """ParM parity model for group size K (trained per K, cached)."""
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"parity_k{k}")
+    xtr, _, _, _ = dataset()
+    template = init_classifier(CLS_CFG, jax.random.PRNGKey(1))
+    if os.path.exists(path + ".npz"):
+        params = load(path, template)
+        return jax.tree.map(jnp.asarray, params)
+    params, _ = train_parity_model(CLS_CFG, base_model(), xtr, k,
+                                   steps=800)
+    save(path, params)
+    return params
+
+
+def predict_fn():
+    params = base_model()
+    return jax.jit(lambda x: classifier_apply(CLS_CFG, params, x))
+
+
+def parity_fn(k: int):
+    params = parity_model(k)
+    return jax.jit(lambda x: classifier_apply(CLS_CFG, params, x))
+
+
+def base_accuracy() -> float:
+    _, _, xte, yte = dataset()
+    return accuracy(CLS_CFG, base_model(), xte, yte)
+
+
+def test_accuracy_of(preds: jnp.ndarray, labels) -> float:
+    return float(np.mean(np.argmax(np.asarray(preds), -1)
+                         == np.asarray(labels)))
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    """Returns (result, us_per_call)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(max(iters, 1)):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / max(iters, 1) * 1e6
+    return out, us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """CSV row per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

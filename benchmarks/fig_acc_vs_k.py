@@ -1,0 +1,53 @@
+"""Paper Figs. 3/5/6: accuracy vs K (S=1) — ApproxIFER vs ParM vs base.
+
+Worst case throughout (paper Appendix C): for ApproxIFER one worker is
+always missing; for ParM one *uncoded* prediction is always missing and
+must be reconstructed from the parity.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import CodingConfig, coded_inference, parm_inference
+from repro.serving.failures import sample_straggler_mask
+
+KS = (2, 4, 8, 10, 12)
+
+
+def run(emit=common.emit):
+    _, _, xte, yte = common.dataset()
+    f = common.predict_fn()
+    base_acc = common.base_accuracy()
+    emit("fig_acc_vs_k/base", 0.0, f"acc={base_acc:.4f}")
+
+    rng = np.random.RandomState(0)
+    rows = {}
+    for k in KS:
+        n = (len(xte) // k) * k
+        x = jnp.asarray(xte[:n])
+        y = yte[:n]
+        cfg = CodingConfig(k=k, s=1)
+        mask = sample_straggler_mask(cfg, rng)
+
+        out, us = common.timed(
+            lambda xx: coded_inference(f, cfg, xx, straggler_mask=mask), x)
+        acc = common.test_accuracy_of(out, y)
+
+        fp = common.parity_fn(k)
+        pout, pus = common.timed(
+            lambda xx: parm_inference(f, fp, xx, k,
+                                      straggler=rng.randint(k)), x)
+        pacc = common.test_accuracy_of(pout, y)
+
+        rows[k] = (acc, pacc)
+        emit(f"fig_acc_vs_k/approxifer_k{k}", us,
+             f"acc={acc:.4f};base={base_acc:.4f}")
+        emit(f"fig_acc_vs_k/parm_k{k}", pus, f"acc={pacc:.4f}")
+    return {"base": base_acc, "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

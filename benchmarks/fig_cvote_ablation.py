@@ -1,0 +1,58 @@
+"""Ablation (beyond-paper adaptation, DESIGN.md §3): Algorithm 2's
+majority vote over a SUBSET of output coordinates.
+
+The paper votes over all C=10 classes; LLM heads have up to 257k.  This
+sweep measures locator success rate vs the number of voting coordinates —
+validating that a strided <=64-coordinate subset suffices (the adaptation
+the serving path uses for vocab-sized logits).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.berrut import CodingConfig
+from repro.core.error_locator import chebyshev_design, locate_errors
+
+K, E, TRIALS, SIGMA = 8, 2, 40, 10.0
+
+
+def _rational_values(cfg, rng, n_coords):
+    betas = np.asarray(cfg.betas)
+    t = np.asarray(chebyshev_design(jnp.asarray(betas, jnp.float32),
+                                    cfg.k - 1))
+    vals = []
+    for _ in range(n_coords):
+        p = rng.randn(cfg.k)
+        q = rng.randn(cfg.k) * 0.1
+        q[0] = 1.0
+        vals.append((t @ p) / (t @ q))
+    return betas, np.stack(vals, -1).astype(np.float32)
+
+
+def run(emit=common.emit):
+    cfg = CodingConfig(k=K, s=0, e=E)
+    out = {}
+    for c_vote in (1, 2, 4, 8, 16, 64):
+        rng = np.random.RandomState(0)
+        hits = 0
+        for t in range(TRIALS):
+            betas, vals = _rational_values(cfg, rng, c_vote)
+            bad = 2 + rng.choice(cfg.num_workers - 4, size=E,
+                                 replace=False)
+            vals[bad] += SIGMA * rng.randn(E, c_vote).astype(np.float32)
+            adv = locate_errors(jnp.asarray(betas, jnp.float32),
+                                jnp.asarray(vals),
+                                jnp.ones(cfg.num_workers), k=K, e=E)
+            hits += set(np.where(np.asarray(adv))[0]) == set(bad)
+        rate = hits / TRIALS
+        out[c_vote] = rate
+        emit(f"fig_cvote_ablation/c{c_vote}", 0.0,
+             f"locate_success={rate:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

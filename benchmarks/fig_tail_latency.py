@@ -1,0 +1,30 @@
+"""Paper §1 motivation: tail latency vs worker cost.
+
+Simulates Pareto-tailed worker latencies (Dean & Barroso) and compares
+p50/p99/p99.9 response times of no-redundancy, (S+1)-replication, and
+ApproxIFER at their respective worker counts — the trade the paper's
+protocol exists to win: replication-grade tail latency at K+S instead of
+(S+1)K workers.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.serving.latency import LatencyModel, percentile_table
+
+
+def run(emit=common.emit):
+    model = LatencyModel()
+    out = {}
+    for k, s in ((8, 1), (8, 2), (12, 1)):
+        table = percentile_table(model, k, s)
+        out[(k, s)] = table
+        for name, row in table.items():
+            emit(f"fig_tail_latency/k{k}_s{s}_{name}", 0.0,
+                 f"workers={row['workers']};p50={row['p50_ms']:.1f}ms;"
+                 f"p99={row['p99_ms']:.1f}ms;p999={row['p999_ms']:.1f}ms")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Deliverable (g): render the dry-run roofline table from persisted
+results (benchmarks/results/dryrun/*.json) as CSV rows."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_results(multi_pod=None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        d = json.load(open(path))
+        if multi_pod is not None and d.get("multi_pod") != multi_pod:
+            continue
+        rows.append(d)
+    return rows
+
+
+def run(emit=common.emit):
+    rows = load_results()
+    n_ok = n_skip = n_fail = 0
+    for d in rows:
+        tag = f"{d['arch']}/{d['shape']}/" \
+              f"{'multi' if d.get('multi_pod') else 'single'}"
+        if d["status"] == "skip":
+            n_skip += 1
+            emit(f"roofline/{tag}", 0.0, "skip=" + d.get("reason", ""))
+            continue
+        if d["status"] != "ok":
+            n_fail += 1
+            emit(f"roofline/{tag}", 0.0, "FAIL=" + d.get("error", "")[:60])
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        emit(f"roofline/{tag}", 0.0,
+             f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"dominant={d['dominant_term']};"
+             f"model_over_hlo={r.get('model_over_hlo') and round(r['model_over_hlo'], 3)};"
+             f"fits_hbm={d.get('fits_hbm')}")
+    emit("roofline/summary", 0.0,
+         f"ok={n_ok};skip={n_skip};fail={n_fail}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``
+prints ``name,us_per_call,derived`` CSV rows for every experiment.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, fig_acc_archs, fig_acc_trained_lm,
+                            fig_acc_vs_e,
+                            fig_acc_vs_k, fig_acc_vs_s, fig_sigma,
+                            fig_cvote_ablation, fig_systematic,
+                            fig_tail_latency, roofline_table,
+                            table_overhead)
+
+    modules = [
+        ("fig_acc_vs_k (paper Figs 3/5/6)", fig_acc_vs_k),
+        ("fig_acc_vs_s (paper Fig 7)", fig_acc_vs_s),
+        ("fig_acc_vs_e (paper Fig 9)", fig_acc_vs_e),
+        ("fig_sigma (paper Fig 11)", fig_sigma),
+        ("fig_acc_archs (paper Figs 8/10)", fig_acc_archs),
+        ("fig_acc_trained_lm (trained-model coded serving)",
+         fig_acc_trained_lm),
+        ("fig_systematic (beyond-paper)", fig_systematic),
+        ("fig_tail_latency (paper §1 motivation)", fig_tail_latency),
+        ("fig_cvote_ablation (DESIGN §3 adaptation)", fig_cvote_ablation),
+        ("table_overhead (paper §1/§4)", table_overhead),
+        ("bench_kernels", bench_kernels),
+        ("roofline_table (deliverable g)", roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in modules:
+        print(f"# --- {title}", file=sys.stderr)
+        try:
+            mod.run()
+        except Exception as exc:  # keep the harness running
+            failures += 1
+            print(f"{mod.__name__},0.0,ERROR={exc!r}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

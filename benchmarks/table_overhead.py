@@ -1,0 +1,33 @@
+"""Paper §1 contribution 2 / §4: worker-count overhead table.
+
+ApproxIFER: K+S workers (E=0) or 2(K+E)+S; replication: (S+1)K or (2E+1)K.
+Also reports the ParM retraining burden ApproxIFER removes (parity-model
+training steps per (base model, K) pair vs zero).
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import CodingConfig, replication_workers
+
+
+def run(emit=common.emit):
+    rows = []
+    for k in (2, 4, 8, 12):
+        for s, e in ((1, 0), (2, 0), (3, 0), (0, 1), (0, 2), (0, 3)):
+            cfg = CodingConfig(k=k, s=s, e=e)
+            rep = replication_workers(k, s, e)
+            rows.append((k, s, e, cfg.num_workers, rep))
+            emit(f"table_overhead/k{k}_s{s}_e{e}", 0.0,
+                 f"approxifer_workers={cfg.num_workers};"
+                 f"replication_workers={rep};"
+                 f"savings={rep - cfg.num_workers};"
+                 f"overhead={cfg.overhead:.2f}")
+    emit("table_overhead/parity_retraining", 0.0,
+         "parm=1 parity model per (base model, K), trained to "
+         "convergence; approxifer=0 (model-agnostic encode/decode)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""End-to-end driver: serve a small LLM with batched requests through the
+full ApproxIFER protocol (assignment deliverable b).
+
+16 requests arrive at the batcher, are grouped K=4 per group, Berrut-
+encoded into 6 coded streams/group (S=1 straggler + E... here S=1), and
+decoded autoregressively for 8 steps while a random worker straggles at
+EVERY step.  With --e 1 a Byzantine worker corrupts its logits each step
+and is located + excluded by Algorithm 2.
+
+  PYTHONPATH=src python examples/serve_coded_llm.py
+  PYTHONPATH=src python examples/serve_coded_llm.py --e 1 --steps 4
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--s", type=int, default=1)
+    ap.add_argument("--e", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+    serve.run(args.arch, reduced=True, requests=args.requests, k=args.k,
+              s=args.s, e=args.e, prompt_len=args.prompt_len,
+              steps=args.steps, byz_sigma=50.0)
+
+
+if __name__ == "__main__":
+    main()

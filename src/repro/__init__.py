@@ -1,0 +1,3 @@
+"""ApproxIFER in JAX: coded, resilient prediction serving (AAAI 2022)."""
+
+__version__ = "1.0.0"

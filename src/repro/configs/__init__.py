@@ -1,0 +1,53 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {list_archs()}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[name]).reduced()
+
+
+# Which serving shapes each arch supports (DESIGN.md §4 skip policy).
+def supported_shapes(name: str) -> List[str]:
+    cfg = get_config(name)
+    shapes = ["train_4k", "prefill_32k"]
+    if cfg.causal:                      # encoder-only has no decode step
+        shapes += ["decode_32k", "long_500k"]
+    return shapes
+
+
+def shape_config_for(name: str, shape: str) -> ModelConfig:
+    """Arch config specialised for a shape (SWA variant for long_500k)."""
+    cfg = get_config(name)
+    if shape == "long_500k" and cfg.arch_type not in ("ssm",):
+        # sub-quadratic requirement: sliding-window variant (window 4096)
+        cfg = cfg.sliding_variant(4096)
+    return cfg

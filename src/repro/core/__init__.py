@@ -1,0 +1,19 @@
+"""ApproxIFER core: Berrut coded inference, error location, baselines."""
+
+from repro.core.berrut import (CodingConfig, chebyshev_first_kind,
+                               chebyshev_second_kind, decode, decode_matrix,
+                               encode, encode_matrix)
+from repro.core.engine import (ApproxIFEREngine, coded_inference,
+                               decode_groups, encode_groups, group_queries)
+from repro.core.error_locator import (locate_errors,
+                                      locate_errors_from_logits)
+from repro.core.replication import replicated_inference, replication_workers
+from repro.core.parity import parm_inference
+
+__all__ = [
+    "CodingConfig", "chebyshev_first_kind", "chebyshev_second_kind",
+    "encode", "decode", "encode_matrix", "decode_matrix",
+    "ApproxIFEREngine", "coded_inference", "encode_groups", "decode_groups",
+    "group_queries", "locate_errors", "locate_errors_from_logits",
+    "replicated_inference", "replication_workers", "parm_inference",
+]

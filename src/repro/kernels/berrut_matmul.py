@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused Berrut coded encode/decode contraction.
+
+The ApproxIFER hot path applies a small (O, I) barycentric matrix to a
+huge feature tensor: encode O=N+1, I=K; decode O=K, I=N+1 (O, I <= ~64).
+This is a skinny matmul with extreme feature-dim reuse: the whole weight
+tile lives in VMEM (even SMEM-sized) while feature tiles stream
+HBM -> VMEM once.  Tiling: feature dim in 512-wide lanes (128-aligned),
+groups on the grid's leading axis; fp32 accumulation.
+
+ops.py dispatches here on TPU; tests run interpret=True against
+ref.berrut_apply_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FEATURE_TILE = 512
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    # w: (O, I) fp32;  x: (1, I, FT);  o: (1, O, FT)
+    w = w_ref[...].astype(jnp.float32)
+    x = x_ref[0].astype(jnp.float32)
+    o_ref[0, :, :] = jnp.dot(
+        w, x, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def berrut_apply(weights: jnp.ndarray, x: jnp.ndarray,
+                 interpret: bool = False) -> jnp.ndarray:
+    """(O, I) @ (..., I, F) -> (..., O, F) with fp32 accumulation.
+
+    Matches ref.berrut_apply_ref for any leading batch dims.
+    """
+    o_dim, i_dim = weights.shape
+    lead = x.shape[:-2]
+    f = x.shape[-1]
+    xg = x.reshape((-1, i_dim, f))
+    g = xg.shape[0]
+
+    ft = min(FEATURE_TILE, f) if f % 128 == 0 else f
+    pad_f = (-f) % ft
+    if pad_f:
+        xg = jnp.pad(xg, ((0, 0), (0, 0), (0, pad_f)))
+    fp = f + pad_f
+
+    grid = (g, fp // ft)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((o_dim, i_dim), lambda gi, fi: (0, 0)),
+            pl.BlockSpec((1, i_dim, ft), lambda gi, fi: (gi, 0, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, o_dim, ft), lambda gi, fi: (gi, 0, fi)),
+        out_shape=jax.ShapeDtypeStruct((g, o_dim, fp), x.dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), xg)
+    if pad_f:
+        out = out[..., :f]
+    return out.reshape(*lead, o_dim, f)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: single-token decode attention over a long KV cache.
+
+The decode_32k / long_500k hot spot: one query row per stream against a
+32k-512k cache.  The cache length is the tiled (streamed) dimension; fp32
+online-softmax state lives in VMEM scratch.  GQA: the grid iterates KV
+heads; the ``rep`` q-heads sharing each KV head ride the sublane dim so
+the (rep, KT) score matmul feeds the MXU.
+
+Masking is positional (``kv_mask``: live ring-buffer slots), matching
+ref.decode_attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+KV_TILE = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            softcap: float, scale: float, kv_scale: float = 0.0):
+    wi = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (rep, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (KT, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (KT, D)
+    if kv_scale > 0.0:
+        # int8 KV cache: dequantise per block IN VMEM — HBM traffic stays
+        # at the int8 byte count (the decode memory-term lever,
+        # EXPERIMENTS.md §5.3 iter 1)
+        k = k / kv_scale
+        v = v / kv_scale
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (rep, KT)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    live = mask_ref[0, :] > 0                             # (KT,)
+    s = jnp.where(live[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(live[None, :], p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(wi == nw - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "kv_scale",
+                                              "interpret"))
+def flash_decode(q, k_cache, v_cache, kv_mask, *, softcap=0.0,
+                 kv_scale=0.0, interpret=False):
+    """q: (B,H,D); caches: (B,W,KV,D); kv_mask: (B,W) bool/int.
+
+    ``kv_scale`` > 0 marks int8 caches quantised as round(x * kv_scale):
+    dequantisation happens per block inside the kernel (VMEM), so cache
+    HBM traffic is the int8 byte count.  Matches ref.decode_attention_ref
+    on dequantised values.
+    """
+    b, h, d = q.shape
+    w, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    scale = 1.0 / (d ** 0.5)
+
+    pad_w = (-w) % KV_TILE
+    kp = jnp.pad(k_cache, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+    mp = jnp.pad(kv_mask.astype(jnp.int32), ((0, 0), (0, pad_w)))
+    wp = w + pad_w
+    qg = q.reshape(b, kv, rep, d)
+
+    grid = (b, kv, wp // KV_TILE)
+    kernel = functools.partial(_kernel, softcap=softcap, scale=scale,
+                               kv_scale=kv_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), lambda bi, gi, wi: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, KV_TILE, 1, d),
+                         lambda bi, gi, wi: (bi, wi, gi, 0)),
+            pl.BlockSpec((1, KV_TILE, 1, d),
+                         lambda bi, gi, wi: (bi, wi, gi, 0)),
+            pl.BlockSpec((1, KV_TILE), lambda bi, gi, wi: (bi, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda bi, gi, wi: (bi, gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kp, vp, mp)
+    return out.reshape(b, h, d)

@@ -1,0 +1,107 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+Model code calls these; the implementation is chosen by backend:
+  * ``tpu``  -> pl.pallas_call kernels (kernels/*.py)
+  * others   -> the pure-jnp references (kernels/ref.py)
+Tests force ``interpret=True`` to execute the kernel bodies on CPU.
+
+Set ``repro.kernels.ops.FORCE_IMPL`` to "jnp" | "pallas" | "interpret" to
+override (used by tests and the dry-run, which lowers for a 512-device CPU
+mesh where TPU kernels cannot lower).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+FORCE_IMPL: Optional[str] = None
+
+
+def _impl() -> str:
+    if FORCE_IMPL is not None:
+        return FORCE_IMPL
+    try:
+        platform = jax.devices()[0].platform
+    except RuntimeError:
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "jnp"
+
+
+def berrut_apply(weights: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    impl = _impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import berrut_matmul
+        return berrut_matmul.berrut_apply(
+            weights, x, interpret=impl == "interpret")
+    return ref.berrut_apply_ref(weights, x)
+
+
+# XLA-path attention implementation: "naive" materialises (S, L) scores;
+# "blocked" is the flash-style online-softmax scan (§Perf optimisation).
+# "auto" picks blocked for long sequences.
+ATTN_IMPL = "auto"
+BLOCKED_THRESHOLD = 8192
+
+
+def attention(q, k, v, *, causal=True, window=None, prefix=0, softcap=0.0,
+              q_offset=0, unroll=False):
+    impl = _impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_attention
+        return flash_attention.flash_attention(
+            q, k, v, causal=causal, window=window, prefix=prefix,
+            softcap=softcap, q_offset=q_offset,
+            interpret=impl == "interpret")
+    use_blocked = (ATTN_IMPL == "blocked"
+                   or (ATTN_IMPL == "auto"
+                       and k.shape[1] >= BLOCKED_THRESHOLD))
+    if use_blocked:
+        return ref.attention_blocked(q, k, v, causal=causal, window=window,
+                                     prefix=prefix, softcap=softcap,
+                                     q_offset=q_offset, unroll=unroll)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             prefix=prefix, softcap=softcap,
+                             q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, kv_mask, *, softcap=0.0,
+                     kv_scale=0.0):
+    """kv_scale > 0 marks int8 caches (values quantised as round(x*scale)).
+
+    The Pallas kernel dequantises per block in VMEM (HBM traffic = int8
+    bytes); the jnp path dequantises up front (XLA materialises the copy —
+    the proxy-vs-target divergence recorded in EXPERIMENTS.md §5.3).
+    """
+    impl = _impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_decode
+        return flash_decode.flash_decode(
+            q, k_cache, v_cache, kv_mask, softcap=softcap,
+            kv_scale=kv_scale, interpret=impl == "interpret")
+    if kv_scale > 0.0:
+        k_cache = k_cache.astype(jnp.float32) / kv_scale
+        v_cache = v_cache.astype(jnp.float32) / kv_scale
+    return ref.decode_attention_ref(q, k_cache.astype(q.dtype),
+                                    v_cache.astype(q.dtype), kv_mask,
+                                    softcap=softcap)
+
+
+def ssd(x, dt, a_log, b, c, d_skip, h0=None, chunk: int = 128):
+    impl = _impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import ssd_scan
+        return ssd_scan.ssd_chunked(
+            x, dt, a_log, b, c, d_skip, h0=h0, chunk=chunk,
+            interpret=impl == "interpret")
+    return ref.ssd_chunked_ref(x, dt, a_log, b, c, d_skip, h0=h0, chunk=chunk)
+
+
+def ssd_step(h, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    # Single-token state update: elementwise + tiny einsum — XLA fuses this
+    # fine on every backend; no kernel needed.
+    return ref.ssd_step_ref(h, x_t, dt_t, a_log, b_t, c_t, d_skip)

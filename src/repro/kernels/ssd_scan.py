@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: chunked SSD (Mamba2 state-space duality).
+
+TPU adaptation (DESIGN.md §6): no warp-shuffle scan exists on TPU, so we
+use the SSD matmul form — per chunk a dense (Q,Q) decay-masked attention-
+like matmul plus a rank-Q state update, with the (P,N) recurrent state
+carried across chunks in fp32 VMEM scratch (the chunk axis is the grid's
+innermost, sequential on TPU).  All heavy ops are MXU matmuls.
+
+Grid: (B, H, num_chunks).  Per-head state (P, N) = (64, 128) fp32 = 32 KB
+VMEM — tiny; chunk tiles (Q=128) keep every operand 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref, h0_ref,
+            y_ref, hout_ref, h_scr, *, chunk: int, use_h0: bool):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        if use_h0:
+            h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+        else:
+            h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))      # scalar
+    b = b_ref[0].astype(jnp.float32)                   # (Q, N)
+    c = c_ref[0].astype(jnp.float32)                   # (Q, N)
+    d_skip = dskip_ref[0].astype(jnp.float32)          # scalar
+
+    la = a * dt                                        # (Q,) log decay
+    lcum = jnp.cumsum(la)                              # (Q,)
+    xbar = x * dt[:, None]                             # (Q, P)
+
+    # intra-chunk: att[t, tau] = (c_t . b_tau) * exp(L_t - L_tau), tau <= t
+    gap = lcum[:, None] - lcum[None, :]                # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.dot(c, b.T, preferred_element_type=jnp.float32)
+    att = att * jnp.exp(jnp.where(tri, gap, NEG_INF))
+    y = jnp.dot(att, xbar, preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: y += (C @ h_in^T) * exp(lcum)
+    h_in = h_scr[...]                                  # (P, N)
+    y = y + (jnp.dot(c, h_in.T, preferred_element_type=jnp.float32)
+             * jnp.exp(lcum)[:, None])
+
+    y_ref[0, :, 0, :] = (y + x * d_skip).astype(y_ref.dtype)
+
+    # state update: h_out = exp(sum la) * h_in + sum_tau decay_to_end * xbar_tau b_tau^T
+    decay_to_end = jnp.exp(lcum[-1] - lcum)            # (Q,)
+    s_chunk = jnp.dot((xbar * decay_to_end[:, None]).T, b,
+                      preferred_element_type=jnp.float32)  # (P, N)
+    h_scr[...] = jnp.exp(lcum[-1]) * h_in + s_chunk
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        hout_ref[0, 0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, dt, a_log, b, c, d_skip, h0=None, chunk: int = 128,
+                interpret: bool = False):
+    """Matches ref.ssd_chunked_ref / ref.ssd_scan_ref.
+
+    x: (B,S,H,P); dt: (B,S,H); a_log/d_skip: (H,); b,c: (B,S,N);
+    h0: (B,H,P,N) optional.  Returns (y, h_final fp32).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    use_h0 = h0 is not None
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    grid = (bsz, h, nc)
+    kernel = functools.partial(_kernel, chunk=q, use_h0=use_h0)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b, c, d_skip, h0.astype(jnp.float32))
+    return y, h_final

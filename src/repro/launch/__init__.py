@@ -1,0 +1,7 @@
+"""Launcher: meshes, shardings, dry-run, train/serve drivers."""
+
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                               make_host_mesh, make_production_mesh)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW_PER_LINK"]

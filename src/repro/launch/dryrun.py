@@ -1,0 +1,462 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+Lowers + compiles every (architecture x input shape) on the production
+meshes — 16x16 single-pod and 2x16x16 multi-pod — against
+ShapeDtypeStruct inputs (no allocation), prints memory/cost analysis, and
+persists the roofline terms to benchmarks/results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES, serving_coding
+from repro.core.berrut import CodingConfig
+from repro.launch import hlo_analysis, shardings, specs
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import cache_axes, logical_axes, partitioning
+from repro.models.model import lm_loss  # noqa: F401  (import check)
+from repro.optim import OptimizerConfig, opt_state_axes
+from repro.serving.coded_serving import (CodedServingState,
+                                         coded_decode_step, coded_prefill)
+from repro.training import TrainConfig, train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+# Per-arch production knobs for the big-memory training shapes:
+# microbatch grad accumulation (activation-memory lever, EXPERIMENTS.md
+# §Perf) — global batch 256 is split into this many sequential chunks.
+TRAIN_MICROBATCHES = {
+    # chosen so per-device temp (activations + vocab-sized logits) fits
+    # 16 GB HBM; iterated in EXPERIMENTS.md §Perf
+    "grok-1-314b": 16,
+    "qwen3-moe-30b-a3b": 8,
+    "phi4-mini-3.8b": 16,
+    "paligemma-3b": 4,
+    "qwen3-0.6b": 4,
+    "hubert-xlarge": 2,
+    "h2o-danube-1.8b": 2,
+    "stablelm-1.6b": 2,
+    "zamba2-1.2b": 8,
+    "mamba2-780m": 8,
+}
+
+# Serving coding parameters for the dry-run table (paper headline K=8,S=1;
+# K capped by the global batch — long_500k K=1 degenerates to replication).
+SERVE_K, SERVE_S, SERVE_E = 8, 1, 0
+SERVE_SYSTEMATIC = False
+
+# §Perf lever: context-parallel activations (seq dim over "model").
+SEQ_SHARD = False
+
+
+def _context_rules(cfg, mesh):
+    if not SEQ_SHARD:
+        return None
+    from repro.models.partitioning import DEFAULT_RULES
+    rules = dict(DEFAULT_RULES)
+    rules["seq"] = "model"
+    return rules
+
+
+KV_INT8 = False
+CAPACITY_FACTOR = None
+
+
+def production_config(arch: str, shape_name: str):
+    cfg = configs.shape_config_for(arch, shape_name)
+    kw = dict(param_dtype="bfloat16", activation_dtype="bfloat16",
+              remat=True,
+              kv_cache_dtype="int8" if KV_INT8 else "auto")
+    if CAPACITY_FACTOR is not None:
+        kw["capacity_factor"] = CAPACITY_FACTOR
+    return cfg.with_updates(**kw)
+
+
+def _train_artifacts(cfg, shape, mesh):
+    mb = TRAIN_MICROBATCHES.get(cfg.name.replace("-swa", ""), 1)
+    # per-microbatch batch must stay divisible by the batch mesh axes
+    # (uneven batches make GSPMD replicate — EXPERIMENTS.md §5.1 iter 4)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ways = sizes.get("pod", 1) * sizes.get("data", 1)
+    while mb > 1 and (shape.global_batch // mb) % ways:
+        mb //= 2
+    tcfg = TrainConfig(optimizer=OptimizerConfig(), microbatches=mb)
+
+    def step(params, opt_state, batch):
+        return train_step(cfg, tcfg, params, opt_state, batch)
+
+    params_s, opt_s = specs.model_state_specs(cfg)
+    batch_s = specs.train_batch_specs(cfg, shape)
+    ax = logical_axes(cfg)
+    p_shard = shardings.tree_shardings(mesh, ax, params_s)
+    o_shard = shardings.tree_shardings(mesh, opt_state_axes(ax), opt_s)
+    b_shard = shardings.batch_tree_shardings(mesh, batch_s)
+    jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                     donate_argnums=(0, 1))
+    return jitted, (params_s, opt_s, batch_s)
+
+
+def _prefill_artifacts(cfg, shape, mesh):
+    coding = serving_coding(shape, SERVE_K, SERVE_S, SERVE_E)
+    if SERVE_SYSTEMATIC:
+        coding = CodingConfig(k=coding.k, s=coding.s, e=coding.e,
+                              systematic=True)
+
+    def step(params, inputs):
+        return coded_prefill(cfg, coding, params, inputs,
+                             max_len=shape.seq_len)
+
+    params_s, _ = specs.model_state_specs(cfg)
+    in_s = specs.prefill_input_specs(cfg, shape)
+    ax = logical_axes(cfg)
+    p_shard = shardings.tree_shardings(mesh, ax, params_s)
+    b_shard = shardings.batch_tree_shardings(mesh, in_s)
+    # pin the output cache sharding (kv-heads or cache-length over "model")
+    out_logits, out_state = jax.eval_shape(step, params_s, in_s)
+    c_shard = shardings.cache_shardings(mesh, cfg, out_state.caches)
+    out_shard = (shardings.batch_sharding(mesh, len(out_logits.shape),
+                                          out_logits.shape[0]),
+                 CodedServingState(caches=c_shard,
+                                   pos=shardings.replicated(mesh)))
+    jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                     out_shardings=out_shard)
+    return jitted, (params_s, in_s)
+
+
+def _decode_artifacts(cfg, shape, mesh):
+    coding = serving_coding(shape, SERVE_K, SERVE_S, SERVE_E)
+    if SERVE_SYSTEMATIC:
+        coding = CodingConfig(k=coding.k, s=coding.s, e=coding.e,
+                              systematic=True)
+
+    def step(params, state, tokens):
+        return coded_decode_step(cfg, coding, params, state, tokens)
+
+    params_s, _ = specs.model_state_specs(cfg)
+    state_s, tokens_s = specs.decode_state_specs(cfg, shape, coding)
+    ax = logical_axes(cfg)
+    p_shard = shardings.tree_shardings(mesh, ax, params_s)
+    c_shard = shardings.cache_shardings(mesh, cfg, state_s.caches)
+    s_shard = CodedServingState(caches=c_shard,
+                                pos=shardings.replicated(mesh))
+    t_shard = shardings.batch_tree_shardings(mesh, tokens_s)
+    jitted = jax.jit(step, in_shardings=(p_shard, s_shard, t_shard),
+                     out_shardings=(shardings.batch_sharding(
+                         mesh, 2, shape.global_batch), s_shard),
+                     donate_argnums=(1,))
+    return jitted, (params_s, state_s, tokens_s)
+
+
+def _audit_cost(cfg, shape) -> dict:
+    """GLOBAL HLO FLOPs/bytes from an UNROLLED lowering (never compiled).
+
+    XLA's cost analysis counts while-loop (scan) bodies once, so the
+    compiled per-device numbers under-report layer-scanned models by
+    ~num_layers x.  The audit lowers the same step with scans unrolled and
+    microbatches=1 (identical FLOPs; remat recompute included) and runs
+    cost analysis on the unoptimised module — an unfused upper bound for
+    HBM bytes, exact for dot FLOPs.
+    """
+    acfg = cfg.with_updates(unroll_scans=True)
+    if shape.kind == "train":
+        tcfg = TrainConfig(optimizer=OptimizerConfig(), microbatches=1)
+
+        def step(params, opt_state, batch):
+            return train_step(acfg, tcfg, params, opt_state, batch)
+
+        args = (*specs.model_state_specs(acfg),
+                specs.train_batch_specs(acfg, shape))
+    elif shape.kind == "prefill":
+        coding = serving_coding(shape, SERVE_K, SERVE_S, SERVE_E)
+
+        def step(params, inputs):
+            return coded_prefill(acfg, coding, params, inputs,
+                                 max_len=shape.seq_len)
+
+        args = (specs.model_state_specs(acfg)[0],
+                specs.prefill_input_specs(acfg, shape))
+    else:
+        coding = serving_coding(shape, SERVE_K, SERVE_S, SERVE_E)
+
+        def step(params, state, tokens):
+            return coded_decode_step(acfg, coding, params, state, tokens)
+
+        state_s, tokens_s = specs.decode_state_specs(acfg, shape, coding)
+        args = (specs.model_state_specs(acfg)[0], state_s, tokens_s)
+
+    lowered = jax.jit(step).lower(*args)
+    cost = lowered.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return cost or {}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D (train) / 2*N_active*D (serve),
+    D = REAL tokens processed (coding overhead shows up in the HLO/model
+    ratio, exactly where the paper's resource overhead lives)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per stream
+
+
+def _memory_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        m = None
+    if m is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: int(getattr(m, k)) for k in keys if hasattr(m, k)}
+
+
+def analytic_collective_factor(cfg, shape) -> float:
+    """Per-layer collectives (FSDP gathers, TP reductions) are inside the
+    layer-scan bodies and counted once per run by the static HLO.  The
+    flops-derived factor over-corrects when attention adds a nested scan
+    (blocked path), so collectives use the analytic trip count."""
+    from repro.models.transformer import pattern_runs
+    runs = len(pattern_runs(cfg.layer_pattern))
+    f = cfg.num_layers / max(runs, 1)
+    if shape.kind == "train":
+        f *= TRAIN_MICROBATCHES.get(cfg.name.replace("-swa", ""), 1)
+    return max(f, 1.0)
+
+
+def roofline_terms(audit: dict, cost_dev: dict, coll: dict,
+                   chips: int, f_coll: float = 1.0) -> dict:
+    """Assignment §Roofline: three terms in seconds.
+
+    compute = HLO_FLOPs / (chips * peak) with HLO_FLOPs from the unrolled
+    audit (exact — XLA counts scan bodies once, see _audit_cost).
+
+    The compiled (fused, partitioned) module gives the right PER-OP bytes
+    and collective traffic but counts loop bodies once; we correct both by
+    F = audit_flops_per_dev / compiled_flops_per_dev — loop iterations are
+    identical bodies, so FLOPs and bytes scale together.
+
+    memory     = compiled_bytes/dev * F / HBM_bw      (fused, corrected)
+    collective = per-chip ICI bytes (ring accounting) * F / link_bw
+    """
+    flops_global = hlo_analysis.flops_per_device(audit)
+    bytes_unfused_global = hlo_analysis.hbm_bytes_per_device(audit)
+    flops_dev_once = hlo_analysis.flops_per_device(cost_dev)
+    bytes_dev_once = hlo_analysis.hbm_bytes_per_device(cost_dev)
+    f = ((flops_global / chips) / flops_dev_once
+         if flops_dev_once > 0 else 1.0)
+    f = max(f, 1.0)
+    hbm_dev = bytes_dev_once * f
+    # Collectives were loop-scaled per computation by hlo_analysis
+    # (while-body collectives x analytic trip count, one-time collectives
+    # like the encode reshard counted once).
+    ici = float(coll.get("total", 0.0))
+    return {
+        "hlo_flops_global": flops_global,
+        "hlo_bytes_unfused_global": bytes_unfused_global,
+        "hbm_bytes_per_device": hbm_dev,
+        "ici_bytes_per_device": ici,
+        "loop_correction": round(f, 2),
+        "collective_correction": round(f_coll, 2),
+        "compute_s": flops_global / (chips * PEAK_FLOPS_BF16),
+        "memory_s": hbm_dev / HBM_BW,
+        "collective_s": ici / ICI_BW_PER_LINK,
+    }
+
+
+def dryrun_pair(arch: str, shape_name: str, multi_pod: bool,
+                verbose: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    if shape_name not in configs.supported_shapes(arch):
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skip",
+                "reason": "encoder-only: no decode step (DESIGN.md §4)"}
+
+    cfg = production_config(arch, shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    rules = _context_rules(cfg, mesh)
+    with mesh, partitioning.logical_sharding_context(mesh, rules):
+        if shape.kind == "train":
+            jitted, args = _train_artifacts(cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            jitted, args = _prefill_artifacts(cfg, shape, mesh)
+        else:
+            jitted, args = _decode_artifacts(cfg, shape, mesh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _memory_dict(compiled)
+        try:
+            cost_dev = compiled.cost_analysis()
+            if isinstance(cost_dev, list):
+                cost_dev = cost_dev[0]
+        except Exception:
+            cost_dev = {}
+        text = compiled.as_text()
+        coll = hlo_analysis.collective_bytes(
+            text, loop_factor=analytic_collective_factor(cfg, shape))
+        t_analysis = time.time()
+        audit = _audit_cost(cfg, shape)
+        t_audit = time.time() - t_analysis
+
+    terms = roofline_terms(audit, cost_dev, coll, chips,
+                           f_coll=analytic_collective_factor(cfg, shape))
+    mflops = model_flops(cfg, shape)
+    terms["model_flops"] = mflops
+    terms["model_over_hlo"] = (mflops / terms["hlo_flops_global"]
+                               if terms["hlo_flops_global"] else None)
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "chips": chips,
+        "coding": {"k": serving_coding(shape, SERVE_K, SERVE_S, SERVE_E).k,
+                   "s": SERVE_S, "e": SERVE_E}
+        if shape.kind != "train" else None,
+        "memory": mem,
+        "fits_hbm": (mem.get("argument_size_in_bytes", 0)
+                     + mem.get("temp_size_in_bytes", 0)
+                     - mem.get("alias_size_in_bytes", 0)) < 16e9
+        if mem else None,
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll.get("counts", {}),
+        "roofline": terms,
+        "dominant_term": dominant,
+        "compiled_flops_per_dev_loopsonce": hlo_analysis.flops_per_device(
+            cost_dev),
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "audit_s": round(t_audit, 1),
+        "hlo_bytes": len(text),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} "
+              f"({'multi' if multi_pod else 'single'}-pod, {chips} chips)")
+        print(f"   memory_analysis: {mem}  fits_hbm={result['fits_hbm']}")
+        print(f"   audit: flops={terms['hlo_flops_global']:.3e} "
+              f"hbm/dev={terms['hbm_bytes_per_device']:.3e} "
+              f"(F={terms['loop_correction']}) "
+              f"model_flops={mflops:.3e} "
+              f"ratio={terms['model_over_hlo'] and round(terms['model_over_hlo'], 3)}")
+        print(f"   collectives/dev: {result['collectives']}")
+        print(f"   roofline: compute={terms['compute_s']:.4f}s "
+              f"memory={terms['memory_s']:.4f}s "
+              f"collective={terms['collective_s']:.4f}s "
+              f"-> {dominant}")
+    return result
+
+
+def result_path(arch, shape_name, multi_pod):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    pod = "multi" if multi_pod else "single"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{pod}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--attn", choices=("naive", "blocked", "auto"),
+                    default="naive",
+                    help="XLA attention path (§Perf lever; baseline=naive)")
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="override TRAIN_MICROBATCHES (§Perf lever)")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="shard activation seq dim over 'model' (context "
+                         "parallelism; §Perf lever for head-indivisible "
+                         "archs like phi4 24H/16)")
+    ap.add_argument("--uneven-heads", action="store_true",
+                    help="allow padded head sharding (24H over 16-way "
+                         "model axis = 2/dev + 25%% pad; §Perf lever)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache (halves decode cache traffic; "
+                         "§Perf lever)")
+    ap.add_argument("--capacity", type=float, default=None,
+                    help="MoE capacity factor override (§Perf lever)")
+    ap.add_argument("--systematic", action="store_true",
+                    help="systematic coding for serving shapes "
+                         "(beyond-paper, EXPERIMENTS.md §6)")
+    ap.add_argument("--serve-e", type=int, default=None,
+                    help="Byzantine tolerance E for serving shapes "
+                         "(lowers Algorithm 2: vmapped ridge solves + "
+                         "majority vote at pod scale)")
+    ap.add_argument("--tag", default=None,
+                    help="write result to results/perf/<tag>.json instead")
+    args = ap.parse_args()
+
+    from repro.kernels import ops as _ops
+    _ops.ATTN_IMPL = args.attn
+    global SEQ_SHARD, KV_INT8, CAPACITY_FACTOR, SERVE_E, SERVE_K
+    global SERVE_SYSTEMATIC
+    SERVE_SYSTEMATIC = args.systematic
+    SEQ_SHARD = args.seq_shard
+    KV_INT8 = args.kv_int8
+    CAPACITY_FACTOR = args.capacity
+    if args.serve_e is not None:
+        SERVE_E = args.serve_e
+    if args.uneven_heads:
+        partitioning.UNEVEN_OK.update({"heads", "kv_heads"})
+    if args.microbatches is not None:
+        for k in list(TRAIN_MICROBATCHES):
+            TRAIN_MICROBATCHES[k] = args.microbatches
+
+    combos = []
+    if args.all:
+        for a in configs.list_archs():
+            for s in SHAPES:
+                combos.append((a, s, False))
+                combos.append((a, s, True))
+    else:
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = 0
+    for arch, shape_name, mp in combos:
+        if args.tag:
+            perf_dir = os.path.join(RESULTS_DIR, "../perf")
+            os.makedirs(perf_dir, exist_ok=True)
+            path = os.path.join(perf_dir, f"{args.tag}.json")
+        else:
+            path = result_path(arch, shape_name, mp)
+        if args.skip_existing and os.path.exists(path):
+            continue
+        try:
+            res = dryrun_pair(arch, shape_name, mp)
+        except Exception as exc:  # record failures; they are bugs to fix
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape_name, "multi_pod": mp,
+                   "status": "fail", "error": repr(exc)}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Collective-byte accounting from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but NOT collective
+traffic; we parse the partitioned module for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute defs and convert output
+shapes to per-chip ICI bytes with standard ring-algorithm factors.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[256,4096]{1,0}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUP_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _def_output_bytes(lhs: str) -> int:
+    """Sum array sizes on the LHS of an HLO def (handles tuple outputs)."""
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_NEW_RE.search(line)      # replica_groups=[8,64]  (iota form)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _while_body_lines(hlo_text: str):
+    """Yield (line, in_loop_body) walking computation blocks.
+
+    Scan/while bodies are separate HLO computations referenced as
+    ``body=%name``; collectives inside them execute once per trip, so the
+    caller scales them by the analytic trip count while one-time
+    collectives (e.g. the Berrut encode reshard) are counted once.
+    """
+    bodies = set(re.findall(r"body=%?([\w\.\-]+)", hlo_text))
+    current = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%([\w\.\-]+)\s*\(", line)
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+        yield line, (current in bodies)
+
+
+def collective_bytes(hlo_text: str, loop_factor: float = 1.0
+                     ) -> Dict[str, float]:
+    """Per-chip ICI bytes by collective kind + total.
+
+    Ring-algorithm per-chip traffic (n = replica-group size, B = global
+    payload = output bytes of the op):
+      all-gather:        B * (n-1)/n        (each chip receives B - B/n)
+      reduce-scatter:    B * (n-1)          (B is the scattered output B/n
+                                             per chip; input n*B)
+      all-reduce:        2B * (n-1)/n       (RS + AG phases)
+      all-to-all:        B * (n-1)/n
+      collective-permute: B
+    """
+    per_kind = defaultdict(float)
+    count = defaultdict(int)
+    # HLO def:  %name = <output-shape(s)> <op-name>(<operands>), attrs
+    def_re = re.compile(
+        r"=\s*(\([^)]*\)|\S+)\s+([a-z][a-z0-9\-]*)\(")
+    for line, in_loop in _while_body_lines(hlo_text):
+        stripped = line.strip()
+        m = def_re.search(stripped)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        out_b = _def_output_bytes(shapes_str)
+        n = max(_group_size(stripped), 1)
+        if n == 1:
+            continue
+        if kind == "all-gather":
+            b = out_b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            b = out_b * (n - 1)
+        elif kind == "all-reduce":
+            b = 2.0 * out_b * (n - 1) / n
+        elif kind == "all-to-all":
+            b = out_b * (n - 1) / n
+        else:  # collective-permute
+            b = float(out_b)
+        if in_loop:
+            b *= loop_factor
+        per_kind[kind] += b
+        count[kind] += 1
+    out = dict(per_kind)
+    out["total"] = sum(per_kind.values())
+    out["counts"] = dict(count)
+    return out
+
+
+def flops_per_device(cost: dict) -> float:
+    return float(cost.get("flops", 0.0))
+
+
+def hbm_bytes_per_device(cost: dict) -> float:
+    """Sum bytes accessed terms (operands + outputs) from cost_analysis."""
+    total = 0.0
+    for k, v in cost.items():
+        if k == "bytes accessed" or k.startswith("bytes accessed"):
+            if k == "bytes accessed":
+                return float(v)
+            total += float(v)
+    return total

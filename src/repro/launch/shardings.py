@@ -1,0 +1,83 @@
+"""Logical-axis -> NamedSharding resolution for whole step signatures."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import partitioning
+from repro.models.config import ModelConfig
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shapes_tree,
+                   rules: Optional[dict] = None):
+    """Map a logical-axes pytree + matching shapes pytree to shardings."""
+    def one(axes, shaped):
+        spec = partitioning.resolve_spec(mesh, axes, shaped.shape, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes)
+
+
+def batch_sharding(mesh: Mesh, ndim: int,
+                   batch_size: Optional[int] = None) -> NamedSharding:
+    """Shard the leading (batch) axis over ("pod","data").
+
+    Falls back to the largest divisible prefix of the axes — and to
+    replication for batch=1 (long_500k) — since pjit rejects non-divisible
+    input shardings.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch_size is not None:
+        while axes:
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if batch_size % total == 0:
+                break
+            axes = axes[1:]   # drop "pod" first, then "data"
+    if not axes:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    spec = P(axes if len(axes) > 1 else axes[0], *([None] * (ndim - 1)))
+    return NamedSharding(mesh, spec)
+
+
+def batch_tree_shardings(mesh: Mesh, shapes_tree):
+    return jax.tree.map(
+        lambda s: batch_sharding(mesh, len(s.shape), s.shape[0]),
+        shapes_tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_rules(mesh: Mesh, cfg: ModelConfig) -> Optional[dict]:
+    """KV-cache sharding policy: heads over "model" when divisible, else
+    cache-length over "model" (flash-decode cache split)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    if cfg.num_kv_heads and cfg.num_kv_heads % model == 0:
+        return None                     # default: kv_heads -> model
+    rules = dict(partitioning.DEFAULT_RULES)
+    rules["kv_heads"] = None
+    rules["kv_seq"] = "model"
+    return rules
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, caches_abstract,
+                    rules: Optional[dict] = None):
+    """Shardings for the per-run serving caches (models.cache_axes)."""
+    from repro.models import cache_axes
+    axes = cache_axes(cfg)
+    rules = rules or cache_rules(mesh, cfg)
+    return tree_shardings(mesh, axes, caches_abstract, rules)

@@ -1,0 +1,73 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every step signature.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.  Audio/VLM frontends are stubs: the specs ARE the precomputed
+frame/patch embeddings (assignment carve-out).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeConfig, serving_coding
+from repro.core.berrut import CodingConfig
+from repro.models import abstract_params, init_caches
+from repro.models.config import ModelConfig
+from repro.optim import abstract_opt_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.modality == "audio":
+        return {"frames": SDS((b, s, cfg.frontend_dim), jnp.float32),
+                "targets": SDS((b, s), jnp.int32)}
+    if cfg.modality == "vlm":
+        return {"patches": SDS((b, cfg.num_patches, cfg.frontend_dim),
+                               jnp.float32),
+                "tokens": SDS((b, s - cfg.num_patches), jnp.int32)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Real-query inputs for coded_prefill (batch = G*K real queries)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.modality == "audio":
+        return {"frames": SDS((b, s, cfg.frontend_dim), jnp.float32)}
+    if cfg.modality == "vlm":
+        return {"patches": SDS((b, cfg.num_patches, cfg.frontend_dim),
+                               jnp.float32),
+                "tokens": SDS((b, s - cfg.num_patches), jnp.int32)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def coded_stream_count(shape: ShapeConfig, coding: CodingConfig) -> int:
+    return (shape.global_batch // coding.k) * coding.num_workers
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       coding: CodingConfig):
+    """(state_spec, tokens_spec) for coded_decode_step.
+
+    The caches belong to the CODED streams (G*(N+1)) and span the shape's
+    context length (ring-bounded by the SWA window where applicable).
+    """
+    from repro.serving.coded_serving import (CodedServingState,
+                                             num_padded_streams)
+    cb = num_padded_streams(coding, shape.global_batch // coding.k)
+    dtype = jnp.dtype(cfg.param_dtype)
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, cb, max_len=shape.seq_len, dtype=dtype))
+    state = CodedServingState(caches=caches, pos=SDS((), jnp.int32))
+    tokens = SDS((shape.global_batch, 1), jnp.int32)
+    return state, tokens
+
+
+def model_state_specs(cfg: ModelConfig):
+    """(params_spec, opt_state_spec) for the training step."""
+    params = abstract_params(cfg)
+    return params, abstract_opt_state(params)

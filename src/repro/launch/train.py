@@ -1,0 +1,91 @@
+"""Training driver: mesh setup, sharded state init, train loop, checkpoints.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --reduced --steps 100 --batch 8 --seq 128 [--data-par 1 --model-par 1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import save, step_path
+from repro.data import ShardedLoader, SyntheticLMDataset
+from repro.launch import shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params, logical_axes, partitioning
+from repro.optim import OptimizerConfig, init_opt_state, opt_state_axes
+from repro.training import TrainConfig, train_step
+
+
+def run(arch: str, reduced: bool, steps: int, batch: int, seq: int,
+        data_par: int, model_par: int, lr: float, microbatches: int,
+        ckpt_dir: str | None, log_every: int = 10):
+    cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
+    mesh = make_host_mesh(data_par, model_par)
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(learning_rate=lr, warmup_steps=20,
+                                  total_steps=steps),
+        microbatches=microbatches)
+    ds = SyntheticLMDataset(cfg.vocab_size, seq_len=seq, seed=0)
+    loader = ShardedLoader(ds.stream(batch), mesh=mesh)
+
+    with mesh, partitioning.logical_sharding_context(mesh):
+        ax = logical_axes(cfg)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        p_sh = shardings.tree_shardings(mesh, ax, params)
+        params = jax.device_put(params, p_sh)
+        opt = init_opt_state(params)
+        o_sh = shardings.tree_shardings(mesh, opt_state_axes(ax), opt)
+        opt = jax.device_put(opt, o_sh)
+
+        step_fn = jax.jit(
+            lambda p, o, b: train_step(cfg, tcfg, p, o, b),
+            in_shardings=(p_sh, o_sh,
+                          shardings.batch_tree_shardings(
+                              mesh, jax.eval_shape(lambda: next(loader)))),
+            donate_argnums=(0, 1))
+
+        t0 = time.time()
+        for i in range(steps):
+            batch_dev = next(loader)
+            params, opt, metrics = step_fn(params, opt, batch_dev)
+            if i % log_every == 0 or i == steps - 1:
+                loss = float(metrics["loss"])
+                print(f"step {i:5d}  loss {loss:7.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"grad_norm {float(metrics['grad_norm']):.3f}  "
+                      f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+        if ckpt_dir:
+            save(step_path(ckpt_dir, steps), params,
+                 metadata={"arch": cfg.name, "steps": steps})
+            print(f"saved checkpoint to {ckpt_dir}")
+    return params, float(metrics["loss"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b",
+                    choices=configs.list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    run(args.arch, args.reduced, args.steps, args.batch, args.seq,
+        args.data_par, args.model_par, args.lr, args.microbatches,
+        args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

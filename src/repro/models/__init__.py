@@ -1,0 +1,13 @@
+"""Model zoo: composable transformer/SSM/MoE definitions in pure JAX."""
+
+from repro.models.config import ModelConfig
+from repro.models.model import (abstract_params, decode_step, embed_inputs,
+                                forward, init_caches, init_params, lm_loss,
+                                logical_axes, predict_fn, prefill,
+                                cache_axes)
+
+__all__ = [
+    "ModelConfig", "init_params", "logical_axes", "abstract_params",
+    "forward", "lm_loss", "prefill", "decode_step", "init_caches",
+    "cache_axes", "embed_inputs", "predict_fn",
+]

@@ -1,0 +1,118 @@
+"""Small MLP classifier — the stand-in for the paper's CNN image
+classifiers (no datasets offline; EXPERIMENTS.md documents the
+substitution).  Also used as the ParM parity-model architecture, exactly
+as ParM trains a parity network of the same family as the base model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import OptimizerConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierConfig:
+    dim: int = 64
+    hidden: int = 256
+    depth: int = 2
+    num_classes: int = 10
+
+
+def init_classifier(cfg: ClassifierConfig, rng) -> dict:
+    params = {}
+    dims = [cfg.dim] + [cfg.hidden] * cfg.depth + [cfg.num_classes]
+    keys = jax.random.split(rng, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(keys[i], (a, b)) / np.sqrt(a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def classifier_apply(cfg: ClassifierConfig, params: dict,
+                     x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    for i in range(cfg.depth):
+        h = jax.nn.gelu(h @ params[f"w{i}"] + params[f"b{i}"])
+    i = cfg.depth
+    return h @ params[f"w{i}"] + params[f"b{i}"]
+
+
+def train_classifier(cfg: ClassifierConfig, xs, ys, *, steps=400,
+                     batch=256, lr=2e-3, seed=0):
+    """Plain supervised training; returns (params, final train acc)."""
+    params = init_classifier(cfg, jax.random.PRNGKey(seed))
+    ocfg = OptimizerConfig(learning_rate=lr, warmup_steps=20,
+                           total_steps=steps, weight_decay=0.01)
+    opt = init_opt_state(params)
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+
+    @jax.jit
+    def step(params, opt, bx, by):
+        def loss_fn(p):
+            logits = classifier_apply(cfg, p, bx)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(
+                logp, by[:, None], axis=-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss
+
+    rng = np.random.RandomState(seed)
+    n = xs.shape[0]
+    for i in range(steps):
+        idx = rng.randint(0, n, size=batch)
+        params, opt, loss = step(params, opt, xs[idx], ys[idx])
+
+    acc = accuracy(cfg, params, xs, ys)
+    return params, acc
+
+
+def accuracy(cfg: ClassifierConfig, params, xs, ys) -> float:
+    pred = jnp.argmax(classifier_apply(cfg, params, jnp.asarray(xs)), -1)
+    return float(jnp.mean((pred == jnp.asarray(ys)).astype(jnp.float32)))
+
+
+def train_parity_model(cfg: ClassifierConfig, base_params, xs, k: int, *,
+                       steps=600, batch=64, lr=2e-3, seed=1):
+    """ParM distillation: f_P(sum of K queries) ~ sum of K predictions.
+
+    K-specific, retrained per base model — the scaling limitation the
+    paper removes (its encoder/decoder are model-independent).
+    """
+    parity = init_classifier(cfg, jax.random.PRNGKey(seed + 100))
+    ocfg = OptimizerConfig(learning_rate=lr, warmup_steps=20,
+                           total_steps=steps, weight_decay=0.01)
+    opt = init_opt_state(parity)
+    xs = jnp.asarray(xs)
+
+    @jax.jit
+    def step(parity, opt, groups):
+        # groups: (B, K, dim)
+        target = jnp.sum(
+            classifier_apply(cfg, base_params,
+                             groups.reshape(-1, groups.shape[-1])
+                             ).reshape(groups.shape[0], k, -1), axis=1)
+
+        def loss_fn(p):
+            pred = classifier_apply(cfg, p, jnp.sum(groups, axis=1))
+            return jnp.mean((pred - target) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(parity)
+        parity, opt, _ = adamw_update(ocfg, parity, grads, opt)
+        return parity, opt, loss
+
+    rng = np.random.RandomState(seed)
+    n = xs.shape[0]
+    loss = None
+    for i in range(steps):
+        idx = rng.randint(0, n, size=(batch, k))
+        parity, opt, loss = step(parity, opt, xs[idx])
+    return parity, float(loss)

@@ -1,0 +1,136 @@
+"""Shared layers: norms, rotary embeddings, initialisers, embedding tables.
+
+Parameters are plain pytrees (nested dicts).  Every init_* returns
+``(params, logical_axes)`` with identical structure so the launcher can map
+logical axes to mesh shardings (partitioning.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------- init utils
+
+def trunc_normal(rng, shape, std, dtype):
+    return std * jax.random.truncated_normal(rng, -2.0, 2.0, shape,
+                                             jnp.float32).astype(dtype)
+
+
+def dense_init(rng, d_in, d_out, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return trunc_normal(rng, (d_in, d_out), std, dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def norm_axes(cfg: ModelConfig) -> dict:
+    ax = {"scale": ("d_model",)}
+    if cfg.norm_type == "layernorm":
+        ax["bias"] = ("d_model",)
+    return ax
+
+
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_head(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head RMSNorm over the head_dim axis (qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope_frequencies(cfg: ModelConfig) -> jnp.ndarray:
+    """Inverse frequencies for the rotated fraction of head_dim."""
+    rot = int(cfg.head_dim * cfg.rotary_pct) // 2 * 2
+    exponent = jnp.arange(0, rot, 2, dtype=jnp.float32) / max(rot, 1)
+    return 1.0 / (cfg.rope_theta ** exponent)          # (rot/2,)
+
+
+def apply_rope(cfg: ModelConfig, x: jnp.ndarray,
+               positions: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, head_dim); positions: (B, S) or (S,)."""
+    rot = int(cfg.head_dim * cfg.rotary_pct) // 2 * 2
+    if rot == 0:
+        return x
+    inv = rope_frequencies(cfg)                         # (rot/2,)
+    pos = jnp.asarray(positions, jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    angles = pos[..., None] * inv[None, None, :]        # (B, S, rot/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------- embeddings
+
+def embeddings_axes(cfg: ModelConfig) -> dict:
+    ax = {"embed": ("vocab", "fsdp")}
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("fsdp", "vocab")
+    if cfg.modality in ("audio", "vlm") and cfg.frontend_dim:
+        ax["frontend_proj"] = ("fsdp", "d_model")
+    return ax
+
+
+def init_embeddings(cfg: ModelConfig, rng, dtype) -> dict:
+    rngs = jax.random.split(rng, 3)
+    # unit-RMS after the sqrt(d) input scaling; keeps tied-unembed logits
+    # O(1) at init (std 1.0 gives CE ~ 100x entropy on tied heads)
+    p = {"embed": trunc_normal(rngs[0], (cfg.vocab_size, cfg.d_model),
+                               cfg.d_model ** -0.5, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(rngs[1], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.modality in ("audio", "vlm") and cfg.frontend_dim:
+        p["frontend_proj"] = dense_init(rngs[2], cfg.frontend_dim,
+                                        cfg.d_model, dtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    e = jnp.take(p["embed"], tokens, axis=0)
+    return (e * math.sqrt(cfg.d_model)).astype(e.dtype)
+
+
+def project_frontend(cfg: ModelConfig, p: dict,
+                     frames: jnp.ndarray) -> jnp.ndarray:
+    """Project stubbed frame/patch embeddings into the residual stream."""
+    return frames.astype(p["frontend_proj"].dtype) @ p["frontend_proj"]
+
+
+def unembed(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return x @ p["embed"].T
+    return x @ p["lm_head"]

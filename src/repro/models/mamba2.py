@@ -1,0 +1,154 @@
+"""Mamba2 (SSD — state-space duality) block for mamba2-780m and the SSM
+layers of zamba2-1.2b.
+
+TPU adaptation (DESIGN.md §6): the chunked SSD form replaces GPU warp-level
+scans with dense per-chunk matmuls (MXU-friendly) plus a short sequential
+carry over chunk summaries — this is the Mamba2 paper's own "matmul-
+ification" and transfers to TPU directly.  Decode is an O(1) recurrent
+state update (the SSM state is the "KV cache" of the stream; coded streams
+each carry their own state — DESIGN.md §4/§5).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.partitioning import shard
+
+
+def mamba2_axes(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("fsdp", "ffn"), "conv_w": ("conv", "ffn"),
+        "conv_b": ("ffn",), "a_log": (None,), "d_skip": (None,),
+        "dt_bias": (None,), "gate_norm": ("ffn",),
+        "out_proj": ("ffn", "fsdp"),
+    }
+
+
+def init_mamba2(cfg: ModelConfig, rng, dtype) -> dict:
+    rngs = jax.random.split(rng, 5)
+    d, din, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * n
+    # in_proj emits [z (din), x (din), B (n), C (n), dt (h)]
+    return {
+        "in_proj": layers.dense_init(rngs[0], d, 2 * din + 2 * n + h, dtype),
+        "conv_w": layers.trunc_normal(rngs[1], (cfg.ssm_conv, conv_dim),
+                                      cfg.ssm_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.ones((din,), dtype),
+        "out_proj": layers.dense_init(rngs[4], din, d, dtype,
+                                      1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    din, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din:din + din + 2 * n]
+    dt = proj[..., din + din + 2 * n:]
+    return z, xbc, dt
+
+
+def _gated_out(cfg: ModelConfig, p: dict, y: jnp.ndarray, z: jnp.ndarray):
+    """Mamba2 gated RMSNorm then output projection.  y/z: (..., din)."""
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(gf), -1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(ms + cfg.norm_eps)).astype(y.dtype) \
+        * p["gate_norm"]
+    return g @ p["out_proj"]
+
+
+def mamba2_block(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence SSD (training / prefill without state return)."""
+    y, _, _ = mamba2_forward(cfg, p, x, conv_state=None, ssm_state=None)
+    return y
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                   conv_state, ssm_state):
+    """Shared full-sequence path; returns (y, conv_state, ssm_state)."""
+    bsz, s, _ = x.shape
+    din, n, h, hd = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                     cfg.ssm_head_dim)
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    # depthwise causal conv over (x, B, C)
+    pad = jnp.zeros((bsz, cfg.ssm_conv - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    windows = jnp.stack(
+        [xbc_pad[:, i:i + s] for i in range(cfg.ssm_conv)], axis=2)
+    xbc = jax.nn.silu(
+        jnp.einsum("bskc,kc->bsc", windows, p["conv_w"]) + p["conv_b"])
+    # conv state for decode: the last (K-1) RAW xbc inputs
+    raw_tail = xbc_pad[:, -(cfg.ssm_conv - 1):]
+
+    xs = xbc[..., :din].reshape(bsz, s, h, hd)
+    b = xbc[..., din:din + n]
+    c = xbc[..., din + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xs = shard(xs, "batch", "seq", "ffn", None)
+
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk:
+        chunk //= 2
+    y, h_final = ops.ssd(xs, dt, p["a_log"], b, c, p["d_skip"],
+                         h0=ssm_state, chunk=chunk)
+    y = y.reshape(bsz, s, din)
+    out = _gated_out(cfg, p, y, z)
+    return out, raw_tail, h_final
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.ssm_d_inner + 2 * cfg.ssm_state), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_cache_axes() -> dict:
+    return {"conv": ("batch", "conv", "ffn"),
+            "state": ("batch", "ffn", None, "state")}
+
+
+def mamba2_prefill(cfg: ModelConfig, p: dict, x: jnp.ndarray, cache: dict):
+    y, conv_tail, h_final = mamba2_forward(cfg, p, x, None, None)
+    new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
+                 "state": h_final}
+    return y, new_cache
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray, cache: dict):
+    """Single-token recurrent step.  x: (B, 1, d)."""
+    bsz = x.shape[0]
+    din, n, h, hd = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                     cfg.ssm_head_dim)
+    proj = x[:, 0] @ p["in_proj"]
+    z, xbc_t, dt = _split_proj(cfg, proj)
+    # conv: window = cached K-1 raw inputs + current
+    window = jnp.concatenate([cache["conv"],
+                              xbc_t[:, None].astype(cache["conv"].dtype)], 1)
+    xbc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+
+    x_t = xbc[..., :din].reshape(bsz, h, hd)
+    b_t = xbc[..., din:din + n]
+    c_t = xbc[..., din + n:]
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y_t, h_new = ops.ssd_step(cache["state"], x_t, dt_t, p["a_log"],
+                              b_t, c_t, p["d_skip"])
+    y = y_t.reshape(bsz, 1, din)
+    out = _gated_out(cfg, p, y, z[:, None])
+    return out, {"conv": new_conv, "state": h_new}

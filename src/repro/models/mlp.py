@@ -1,0 +1,42 @@
+"""Dense MLP: SwiGLU (llama family) or GELU (hubert/encoder style)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.partitioning import shard
+
+
+def mlp_axes(cfg: ModelConfig) -> dict:
+    if cfg.mlp_activation == "gelu":
+        return {"w_in": ("fsdp", "ffn"), "w_out": ("ffn", "fsdp")}
+    return {"w_gate": ("fsdp", "ffn"), "w_in": ("fsdp", "ffn"),
+            "w_out": ("ffn", "fsdp")}
+
+
+def init_mlp(cfg: ModelConfig, rng, dtype) -> dict:
+    rngs = jax.random.split(rng, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    if cfg.mlp_activation == "gelu":
+        return {"w_in": layers.dense_init(rngs[0], d, f, dtype),
+                "w_out": layers.dense_init(rngs[2], f, d, dtype, out_scale)}
+    return {"w_gate": layers.dense_init(rngs[0], d, f, dtype),
+            "w_in": layers.dense_init(rngs[1], d, f, dtype),
+            "w_out": layers.dense_init(rngs[2], f, d, dtype, out_scale)}
+
+
+def mlp_block(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp_activation == "gelu":
+        h = jax.nn.gelu(x @ p["w_in"])
+    elif cfg.mlp_activation == "geglu":   # gemma / paligemma
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:  # SwiGLU
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ p["w_out"]

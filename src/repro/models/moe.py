@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based einsum dispatch.
+
+Covers qwen3-moe-30b (128 experts, top-8, renormalised probs) and
+grok-1 (8 experts, top-2, softmax-over-all probs).
+
+Sharding (DESIGN.md §7): expert dim over the "model" mesh axis when the
+expert count divides it (qwen3: 128 % 16 == 0); otherwise experts are
+tensor-sharded on their hidden dim (grok: 8 experts, ff 32768/16 = 2048
+per device).  Dispatch/combine masks are sharded (groups->data,
+experts->model) so the per-device footprint stays bounded — see the
+roofline notes in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.partitioning import shard
+
+
+def moe_axes(cfg: ModelConfig) -> dict:
+    return {
+        "router": ("fsdp", None),
+        "w_gate": ("experts", "fsdp", "expert_ffn"),
+        "w_in": ("experts", "fsdp", "expert_ffn"),
+        "w_out": ("experts", "expert_ffn", "fsdp"),
+    }
+
+
+def init_moe(cfg: ModelConfig, rng, dtype) -> dict:
+    rngs = jax.random.split(rng, 4)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "router": layers.dense_init(rngs[0], d, e, jnp.float32),
+        "w_gate": layers.trunc_normal(rngs[1], (e, d, f), d ** -0.5, dtype),
+        "w_in": layers.trunc_normal(rngs[2], (e, d, f), d ** -0.5, dtype),
+        "w_out": layers.trunc_normal(rngs[3], (e, f, d),
+                                     f ** -0.5 * out_scale, dtype),
+    }
+
+
+def _capacity(cfg: ModelConfig, group_size: int) -> int:
+    cap = group_size * cfg.experts_per_token / cfg.num_experts
+    cap = int(math.ceil(cap * cfg.capacity_factor / 4.0)) * 4
+    return max(cap, 4)
+
+
+def router_probs(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    """Top-k routing.  Returns (probs (..., k), idx (..., k), full_probs)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(full, cfg.experts_per_token)
+    if cfg.router_norm_topk:
+        top_p = top_p / (jnp.sum(top_p, -1, keepdims=True) + 1e-9)
+    return top_p, top_i, full
+
+
+def moe_block(cfg: ModelConfig, p: dict, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (B, S, d), plus aux metrics (load-balance loss)."""
+    bsz, s, d = x.shape
+    tokens = bsz * s
+    gs = min(cfg.moe_group_size, tokens)
+    while tokens % gs:
+        gs //= 2
+    g = tokens // gs
+    cap = _capacity(cfg, gs)
+    e, k = cfg.num_experts, cfg.experts_per_token
+
+    xt = x.reshape(g, gs, d)
+    xt = shard(xt, "groups", None, None)
+    top_p, top_i, full = router_probs(cfg, p, xt)        # (g, gs, k)
+
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)  # (g, gs, k, e)
+    emask = jnp.sum(onehot, axis=2)                       # (g, gs, e)
+    # position of each token within its expert's capacity buffer
+    pos_in_e = jnp.cumsum(emask, axis=1) - emask          # (g, gs, e)
+    keep = (pos_in_e < cap) * emask
+    dispatch = keep[..., None] * jax.nn.one_hot(
+        pos_in_e.astype(jnp.int32), cap, dtype=jnp.float32)  # (g, gs, e, c)
+    dispatch = shard(dispatch, "groups", None, "experts", None)
+    probs_per_e = jnp.einsum("gske,gsk->gse", onehot, top_p)
+    combine = dispatch * probs_per_e[..., None]           # (g, gs, e, c)
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xt)
+    xin = shard(xin, "experts", "groups", None, None)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["w_gate"])) \
+        * jnp.einsum("egcd,edf->egcf", xin, p["w_in"])
+    h = shard(h, "experts", "groups", None, "expert_ffn")
+    y_e = jnp.einsum("egcf,efd->egcd", h, p["w_out"])
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), y_e)
+
+    # Switch-style load-balance aux loss + routing stats
+    frac_tokens = jnp.mean(emask, axis=(0, 1)) / k        # (e,)
+    mean_prob = jnp.mean(full, axis=(0, 1))               # (e,)
+    aux = {
+        "load_balance_loss": e * jnp.sum(frac_tokens * mean_prob),
+        "router_z_loss": jnp.mean(
+            jnp.square(jax.nn.logsumexp(
+                xt.astype(jnp.float32) @ p["router"], axis=-1))),
+        "dropped_fraction": 1.0 - jnp.sum(keep) / (tokens * k),
+    }
+    return y.reshape(bsz, s, d), aux

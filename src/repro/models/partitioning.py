@@ -1,0 +1,170 @@
+"""Logical-axis partitioning (MaxText-style logical axis rules).
+
+Model code annotates parameters and key activations with *logical* axis
+names ("batch", "heads", "ffn", ...).  ``launch/shardings.py`` maps logical
+names to physical mesh axes per mesh.  Outside a mesh context (CPU unit
+tests) every annotation is a no-op, so the same model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical -> physical rules for the production meshes (DESIGN.md §7).
+# Entries may be a single mesh axis, a tuple of axes, or None (replicated).
+# "batch"/"fsdp" pick up the "pod" axis automatically when it exists.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),       # coded-stream / batch axis
+    "seq": None,                    # sequence (context parallel = perf lever)
+    "d_model": None,                # residual stream stays replicated
+    "heads": "model",               # attention q heads
+    "kv_heads": "model",            # only applied when divisible (see below)
+    "kv_seq": None,                 # cache length (sharded when kv small)
+    "head_dim": None,
+    "ffn": "model",                 # MLP hidden
+    "experts": "model",             # MoE expert dim (when divisible)
+    "expert_ffn": "model",          # per-expert hidden (when experts aren't)
+    "vocab": "model",               # embedding / lm-head vocab dim
+    "fsdp": ("pod", "data"),        # weight-sharding axis
+    "layers": None,                 # stacked-scan layer axis
+    "conv": None,
+    "state": None,
+    # MoE dispatch groups are a reshape of the token/batch axis — they MUST
+    # shard over the batch axes.  (A None rule here forces replication via
+    # the explicit constraint: we measured 18 TB/device of all-gathers on
+    # grok-1 train before this fix — EXPERIMENTS.md §Perf grok iteration 1.)
+    "groups": ("pod", "data"),
+    "capacity": None,
+    "workers": None,                # coded-stream axis inside a group
+    # flattened feature axis of the Berrut encode/decode contraction: the
+    # group axis is tiny (G ~ 4), so the feature axis carries ALL the
+    # parallelism during coding (§Perf iteration 5)
+    "coded_flat": ("pod", "data", "model"),
+}
+
+
+# Allow GSPMD uneven (padded) sharding for these logical axes: lets e.g.
+# 24 q-heads shard over a 16-way "model" axis (2/device, 25% padding)
+# instead of full replication.  Activation-only (§Perf lever) — params keep
+# the divisibility requirement so no FSDP memory is wasted.
+UNEVEN_OK: set = set()
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def logical_sharding_context(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate logical->physical sharding for model-internal constraints."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES)
+    if rules:
+        _CTX.rules.update(rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, str):
+        phys = (phys,)
+    size = 1
+    for a in phys:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def resolve_spec(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None,
+                 rules: Optional[dict] = None,
+                 allow_uneven: bool = False) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for ``mesh``.
+
+    Axes whose size does not divide the mesh-axis product are replicated
+    (e.g. kv_heads=8 on a 16-way "model" axis) — GSPMD could pad, but
+    replication is both faster and what production TP does for small KV.
+    """
+    rules = rules or _CTX.rules or DEFAULT_RULES
+    present = set(mesh.axis_names)
+    spec, used = [], set()
+    for i, name in enumerate(logical_axes):
+        phys = rules.get(name) if name else None
+        if phys is None:
+            spec.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        phys = tuple(a for a in phys if a in present and a not in used)
+        if not phys:
+            spec.append(None)
+            continue
+        uneven_ok = allow_uneven and name in UNEVEN_OK
+        if shape is not None and not uneven_ok:
+            sz = 1
+            for a in phys:
+                sz *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+            if shape[i] % sz != 0:
+                spec.append(None)
+                continue
+        used.update(phys)
+        spec.append(phys if len(phys) > 1 else phys[0])
+    return P(*spec)
+
+
+def padded_batch(n: int) -> int:
+    """Round a batch/coded-stream count up to the mesh's batch-axes product.
+
+    GSPMD handles uneven batch shardings by *replicating* activations and
+    all-reducing weight contractions — catastrophically expensive (we
+    measured 24 GB/layer of activation all-reduce for a 36-stream batch on
+    a 16-way data axis).  Padding a few dummy streams is strictly cheaper.
+    No-op off-mesh.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return n
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p = 1
+    for a in ("pod", "data"):
+        p *= sizes.get(a, 1)
+    return -(-n // p) * p
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op off-mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(mesh, logical_axes, shape=x.shape,
+                        allow_uneven=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(mesh: Mesh, logical_axes_tree, params_shapes,
+                   rules: Optional[dict] = None):
+    """Build a NamedSharding pytree for parameters.
+
+    logical_axes_tree: pytree of tuples (one tuple per parameter) matching
+    the params structure; params_shapes: matching pytree of shapes.
+    """
+    def one(axes, shape):
+        return NamedSharding(mesh, resolve_spec(mesh, axes, shape, rules))
+
+    return jax.tree.map(one, logical_axes_tree, params_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))

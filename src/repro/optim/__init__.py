@@ -1,0 +1,7 @@
+from repro.optim.adamw import (OptimizerConfig, OptState, adamw_update,
+                               abstract_opt_state, init_opt_state,
+                               learning_rate, opt_state_axes, global_norm)
+
+__all__ = ["OptimizerConfig", "OptState", "adamw_update", "init_opt_state",
+           "abstract_opt_state", "opt_state_axes", "learning_rate",
+           "global_norm"]

@@ -1,0 +1,119 @@
+"""AdamW + gradient clipping + LR schedules, pure JAX (optax not vendored).
+
+Optimizer state is a pytree with the same structure as the params, so the
+launcher shards it with the identical logical axes (DESIGN.md §7) — this is
+what lets grok-1 (314B) fit: m/v fp32 fully sharded over all 256 chips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # cosine | constant | linear
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray              # ()
+    mu: dict                       # first moment  (fp32)
+    nu: dict                       # second moment (fp32)
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_opt_state(params_shapes) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_shapes)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=zeros,
+                    nu=zeros)
+
+
+def opt_state_axes(param_axes) -> OptState:
+    """Logical axes for the optimizer state (same sharding as params)."""
+    return OptState(step=(), mu=param_axes,
+                    nu=jax.tree.map(lambda a: a, param_axes,
+                                    is_leaf=lambda x: isinstance(x, tuple)))
+
+
+def learning_rate(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - frac
+    else:  # cosine
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * decay
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _is_decayed(path) -> bool:
+    """No weight decay on norms / biases / scalars."""
+    names = {getattr(k, "key", getattr(k, "idx", None)) for k in path}
+    skip = {"scale", "bias", "a_log", "d_skip", "dt_bias", "gate_norm",
+            "q_norm", "k_norm", "conv_b"}
+    return not (names & skip)
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state: OptState):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, grad_norm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    step = state.step + 1
+    lr = learning_rate(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    decayed = {tuple(path): _is_decayed(path) for path, _ in flat_p}
+
+    def upd(path, p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if decayed[tuple(path)]:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(upd, params, mu, nu)
+    metrics = {"lr": lr, "grad_norm": grad_norm}
+    return new_params, OptState(step=step, mu=mu, nu=nu), metrics

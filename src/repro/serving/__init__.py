@@ -1,0 +1,11 @@
+from repro.serving.coded_serving import (CodedServingState, coded_decode_step,
+                                         coded_prefill)
+from repro.serving.failures import (sample_byzantine_mask,
+                                    sample_straggler_mask,
+                                    worst_case_straggler_mask)
+from repro.serving.batcher import GroupBatcher, Request, BatchPlan
+
+__all__ = ["CodedServingState", "coded_prefill", "coded_decode_step",
+           "sample_straggler_mask", "sample_byzantine_mask",
+           "worst_case_straggler_mask", "GroupBatcher", "Request",
+           "BatchPlan"]

@@ -1,0 +1,68 @@
+"""Host-side request batcher: groups incoming requests into coded groups.
+
+The prediction-serving front door (paper Fig. 4): requests arrive one at a
+time; the batcher fills groups of K, pads the tail group by repeating the
+last query (decode for padded slots is discarded), and hands fixed-shape
+batches to the jitted coded steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.berrut import CodingConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    payload: Any                     # modality inputs for one query
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    requests: List[Request]
+    valid: np.ndarray                # (G*K,) bool — padded slots False
+
+
+class GroupBatcher:
+    def __init__(self, coding: CodingConfig, groups_per_batch: int = 1):
+        self.coding = coding
+        self.groups = groups_per_batch
+        self._pending: List[Request] = []
+        self._uid = itertools.count()
+
+    @property
+    def batch_size(self) -> int:
+        return self.groups * self.coding.k
+
+    def submit(self, payload: Any) -> int:
+        uid = next(self._uid)
+        self._pending.append(Request(uid, payload))
+        return uid
+
+    def ready(self) -> bool:
+        return len(self._pending) >= self.batch_size
+
+    def next_batch(self, flush: bool = False) -> Optional[BatchPlan]:
+        """Pop a full batch; with ``flush`` pads a partial tail batch."""
+        n = self.batch_size
+        if len(self._pending) < n and not (flush and self._pending):
+            return None
+        take = self._pending[:n]
+        self._pending = self._pending[n:]
+        valid = np.ones((n,), bool)
+        while len(take) < n:               # pad by repeating the last
+            valid[len(take)] = False
+            take.append(Request(-1, take[-1].payload))
+        return BatchPlan(requests=take, valid=valid)
+
+    def stack_payloads(self, plan: BatchPlan) -> dict:
+        """Stack per-request modality dicts into batch arrays."""
+        keys = plan.requests[0].payload.keys()
+        return {k: np.stack([r.payload[k] for r in plan.requests])
+                for k in keys}

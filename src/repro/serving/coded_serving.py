@@ -1,0 +1,179 @@
+"""Coded serving steps — the paper's protocol integrated INSIDE the jitted
+serving program (DESIGN.md §5).
+
+Every coded stream owns its own KV cache / SSM state: the cache of a
+stream is the cache of its coded embedding history, so stragglers and
+Byzantine workers can be masked at ANY decode step without recomputation.
+
+Shapes: G query groups x K real queries; N+1 coded streams per group.
+The coded-stream axis (G*(N+1)) is the batch axis the mesh shards over
+("pod","data") — a "worker" is the device slice owning one coded stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import berrut
+from repro.core.berrut import CodingConfig
+from repro.core.error_locator import locate_errors_from_logits
+from repro.kernels import ops
+from repro.models import decode_step, embed_inputs, init_caches, prefill
+from repro.models.config import ModelConfig
+from repro.models.partitioning import shard
+
+
+def num_padded_streams(coding: CodingConfig, groups: int) -> int:
+    """Coded streams padded to the mesh batch-axes product (see
+    partitioning.padded_batch — uneven batches make GSPMD replicate)."""
+    from repro.models.partitioning import padded_batch
+    return padded_batch(groups * coding.num_workers)
+
+
+def _code_streams(coding: CodingConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """(G, K, ...) -> (padded_streams, ...) coded streams via the Berrut
+    encode contraction (kernel-dispatched).  Padding streams repeat stream
+    0 and are sliced off after decode."""
+    g = x.shape[0]
+    w = berrut.encode_matrix(coding).astype(x.dtype)      # (N+1, K)
+    flat = x.reshape(g, coding.k, -1)
+    # G is tiny; parallelise the coding contraction over the feature axis
+    # (full mesh), then reshard to the batch layout.
+    flat = shard(flat, None, None, "coded_flat")
+    coded = ops.berrut_apply(w, flat)                     # (G, N+1, F)
+    coded = shard(coded, None, None, "coded_flat")
+    coded = coded.reshape(g * coding.num_workers, *x.shape[2:])
+    pad = num_padded_streams(coding, g) - coded.shape[0]
+    if pad:
+        coded = jnp.concatenate(
+            [coded, jnp.broadcast_to(coded[:1], (pad,) + coded.shape[1:])],
+            axis=0)
+    return shard(coded, "batch", *([None] * (coded.ndim - 1)))
+
+
+def _real_streams(coding: CodingConfig, coded_logits: jnp.ndarray,
+                  groups: int) -> jnp.ndarray:
+    """Drop the divisibility-padding streams before decoding."""
+    return coded_logits[: groups * coding.num_workers]
+
+
+def _decode_logits(coding: CodingConfig, coded_logits: jnp.ndarray,
+                   avail: jnp.ndarray) -> jnp.ndarray:
+    """(G*(N+1), V) + (N+1,) mask -> (G*K, V) via Berrut decode."""
+    v = coded_logits.shape[-1]
+    g = coded_logits.shape[0] // coding.num_workers
+    grouped = coded_logits.reshape(g, coding.num_workers, v)
+    w = berrut.decode_matrix(coding, avail).astype(coded_logits.dtype)
+    out = ops.berrut_apply(w, grouped)                    # (G, K, V)
+    return out.reshape(g * coding.k, v)
+
+
+def _locate_and_mask(coding: CodingConfig, coded_logits: jnp.ndarray,
+                     avail: jnp.ndarray) -> jnp.ndarray:
+    """Run Algorithm 2 per group and exclude located Byzantine workers."""
+    if coding.e == 0:
+        return avail
+    g = coded_logits.shape[0] // coding.num_workers
+    grouped = coded_logits.reshape(g, coding.num_workers, -1)
+    betas = jnp.asarray(coding.betas, jnp.float32)
+
+    def locate(group):
+        return locate_errors_from_logits(coding, betas,
+                                         group.astype(jnp.float32), avail)
+
+    located = jax.vmap(locate)(grouped)                   # (G, N+1)
+    # per-group masks: decode must also be per-group
+    return avail[None, :] * (1.0 - located.astype(avail.dtype))
+
+
+def _decode_logits_per_group(coding: CodingConfig, coded_logits, masks):
+    v = coded_logits.shape[-1]
+    g = coded_logits.shape[0] // coding.num_workers
+    grouped = coded_logits.reshape(g, coding.num_workers, v)
+
+    def dec(group, m):
+        w = berrut.decode_matrix(coding, m).astype(group.dtype)
+        return ops.berrut_apply(w, group)
+
+    out = jax.vmap(dec)(grouped, masks)
+    return out.reshape(g * coding.k, v)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CodedServingState:
+    """Carried between serving steps (a pytree)."""
+
+    caches: list                   # per-run coded-stream caches
+    pos: jnp.ndarray               # () int32 — next position to write
+
+
+def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
+                  inputs: dict, max_len: int,
+                  straggler_mask: Optional[jnp.ndarray] = None,
+                  cache_dtype=None) -> Tuple[jnp.ndarray, CodedServingState]:
+    """Prefill G*K real prompts as G*(N+1) coded streams.
+
+    inputs: modality dict with leading batch = G*K real queries.
+    Returns (decoded last-token logits (G*K, V), serving state).
+    """
+    x = embed_inputs(cfg, params, inputs)                 # (G*K, S, d)
+    gk, s, d = x.shape
+    g = gk // coding.k
+    coded = _code_streams(coding, x.reshape(g, coding.k, s, d))
+    caches = init_caches(cfg, coded.shape[0], max_len,
+                         dtype=cache_dtype or coded.dtype)
+    coded_logits, caches = prefill(cfg, params, {"embeddings": coded},
+                                   caches)
+    coded_logits = _real_streams(coding, coded_logits, g)
+    avail = (straggler_mask if straggler_mask is not None
+             else jnp.ones((coding.num_workers,), jnp.float32))
+    masks = _locate_and_mask(coding, coded_logits, avail)
+    if masks.ndim == 1:
+        logits = _decode_logits(coding, coded_logits, masks)
+    else:
+        logits = _decode_logits_per_group(coding, coded_logits, masks)
+    state = CodedServingState(caches=caches,
+                              pos=jnp.asarray(s, jnp.int32))
+    return logits, state
+
+
+def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
+                      state: CodedServingState, tokens: jnp.ndarray,
+                      straggler_mask: Optional[jnp.ndarray] = None,
+                      byz_mask: Optional[jnp.ndarray] = None,
+                      byz_rng: Optional[jax.Array] = None,
+                      byz_sigma: float = 10.0,
+                      ) -> Tuple[jnp.ndarray, CodedServingState]:
+    """One coded decode step.
+
+    tokens: (G*K, 1) int32 — the sampled next token of each REAL stream.
+    The K token embeddings of each group are Berrut-encoded into N+1 coded
+    embeddings appended to the coded caches (DESIGN.md §5).
+    Returns (decoded logits (G*K, V), new state).
+    """
+    from repro.models import layers as _layers
+    x = _layers.embed_tokens(cfg, params["embeddings"], tokens)  # (G*K,1,d)
+    gk, _, d = x.shape
+    g = gk // coding.k
+    coded = _code_streams(coding, x.reshape(g, coding.k, 1, d))
+    coded_logits, caches = decode_step(cfg, params, state.caches,
+                                       {"embeddings": coded}, state.pos)
+    coded_logits = _real_streams(coding, coded_logits, g)
+    if byz_mask is not None and byz_rng is not None:
+        noise = byz_sigma * jax.random.normal(byz_rng, coded_logits.shape,
+                                              coded_logits.dtype)
+        per_stream = jnp.tile(byz_mask, (g,))
+        coded_logits = coded_logits + per_stream[:, None] * noise
+    avail = (straggler_mask if straggler_mask is not None
+             else jnp.ones((coding.num_workers,), jnp.float32))
+    masks = _locate_and_mask(coding, coded_logits, avail)
+    if masks.ndim == 1:
+        logits = _decode_logits(coding, coded_logits, masks)
+    else:
+        logits = _decode_logits_per_group(coding, coded_logits, masks)
+    return logits, CodedServingState(caches=caches, pos=state.pos + 1)

@@ -1,0 +1,49 @@
+"""Straggler / Byzantine failure simulation (paper §4 experiment setup).
+
+A TPU SPMD step has no per-worker wall clock; failures are availability
+masks over the coded-stream axis (worst case, paper Appendix C) and
+additive-noise corruption for Byzantine workers (paper §4.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.berrut import CodingConfig
+
+
+def sample_straggler_mask(coding: CodingConfig, rng: np.random.RandomState,
+                          num_stragglers: int | None = None) -> jnp.ndarray:
+    """(N+1,) mask with ``num_stragglers`` (default S) random zeros."""
+    s = coding.s if num_stragglers is None else num_stragglers
+    if s > coding.s:
+        raise ValueError(f"{s} stragglers > tolerated S={coding.s}")
+    mask = np.ones((coding.num_workers,), np.float32)
+    if s:
+        idx = rng.choice(coding.num_workers, size=s, replace=False)
+        mask[idx] = 0.0
+    return jnp.asarray(mask)
+
+
+def sample_byzantine_mask(coding: CodingConfig, rng: np.random.RandomState,
+                          num_errors: int | None = None) -> jnp.ndarray:
+    """(N+1,) 1 = worker is Byzantine.  Paper: locations are random."""
+    e = coding.e if num_errors is None else num_errors
+    if e > coding.e:
+        raise ValueError(f"{e} errors > tolerated E={coding.e}")
+    mask = np.zeros((coding.num_workers,), np.float32)
+    if e:
+        idx = rng.choice(coding.num_workers, size=e, replace=False)
+        mask[idx] = 1.0
+    return jnp.asarray(mask)
+
+
+def worst_case_straggler_mask(coding: CodingConfig) -> jnp.ndarray:
+    """Deterministic worst case used in benchmarks: drop the S nodes whose
+    removal maximises decode error (boundary-adjacent interior nodes)."""
+    mask = np.ones((coding.num_workers,), np.float32)
+    if coding.s:
+        mask[1:1 + coding.s] = 0.0
+    return jnp.asarray(mask)

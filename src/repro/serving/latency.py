@@ -1,0 +1,93 @@
+"""Tail-latency simulation — the paper's §1 motivation, quantified.
+
+A prediction-serving system's response time is the time until enough
+workers return.  With per-worker latency L_i ~ base + Pareto tail
+(the standard straggler model, Dean & Barroso "The Tail at Scale"):
+
+  * no redundancy:  wait for ALL K workers            (K workers)
+  * replication:    each query on S+1 replicas; wait for the fastest
+                    replica of EVERY query             ((S+1)K workers)
+  * ApproxIFER:     wait for the fastest N+1-S of N+1 coded workers
+                    (the decoder needs any K when E=0)  (K+S workers)
+
+The simulator also produces availability masks for the engine: the
+workers that had NOT responded at the decode deadline are the stragglers
+— wiring wall-clock semantics to the mask-driven decode (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.berrut import CodingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """base + Pareto-tailed worker latency (heavy-tail stragglers)."""
+
+    base_ms: float = 10.0
+    tail_prob: float = 0.05       # fraction of requests that straggle
+    pareto_shape: float = 1.5     # heavy tail
+    pareto_scale_ms: float = 50.0
+
+    def sample(self, rng: np.random.RandomState, n: int) -> np.ndarray:
+        lat = np.full(n, self.base_ms) + rng.exponential(2.0, size=n)
+        straggle = rng.rand(n) < self.tail_prob
+        tail = self.pareto_scale_ms * (
+            rng.pareto(self.pareto_shape, size=n) + 1.0)
+        return lat + straggle * tail
+
+
+def simulate_no_redundancy(model: LatencyModel, k: int, trials: int,
+                           seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    lat = model.sample(rng, trials * k).reshape(trials, k)
+    return lat.max(axis=1)
+
+
+def simulate_replication(model: LatencyModel, k: int, s: int, trials: int,
+                         seed: int = 0) -> np.ndarray:
+    """(S+1) proactive replicas per query; a query completes at its
+    fastest replica; the batch completes at the slowest query."""
+    rng = np.random.RandomState(seed)
+    lat = model.sample(rng, trials * k * (s + 1)).reshape(trials, k, s + 1)
+    return lat.min(axis=2).max(axis=1)
+
+
+def simulate_approxifer(model: LatencyModel, coding: CodingConfig,
+                        trials: int, seed: int = 0
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Decoder waits for the fastest ``wait_for`` coded workers.
+
+    Returns (batch latency per trial, straggler masks (trials, N+1)).
+    """
+    rng = np.random.RandomState(seed)
+    n = coding.num_workers
+    lat = model.sample(rng, trials * n).reshape(trials, n)
+    kth = np.sort(lat, axis=1)[:, coding.wait_for - 1]
+    masks = (lat <= kth[:, None]).astype(np.float32)
+    return kth, masks
+
+
+def percentile_table(model: LatencyModel, k: int, s: int, trials: int = 20000
+                     ) -> dict:
+    coding = CodingConfig(k=k, s=s)
+    none = simulate_no_redundancy(model, k, trials)
+    rep = simulate_replication(model, k, s, trials, seed=1)
+    aif, _ = simulate_approxifer(model, coding, trials, seed=2)
+    out = {}
+    for name, lat, workers in (
+            ("none", none, k),
+            ("replication", rep, (s + 1) * k),
+            ("approxifer", aif, coding.num_workers)):
+        out[name] = {
+            "workers": workers,
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "p999_ms": float(np.percentile(lat, 99.9)),
+        }
+    return out

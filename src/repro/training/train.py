@@ -1,0 +1,81 @@
+"""Training step: value_and_grad + AdamW with optional microbatch
+gradient accumulation (jax.lax.scan over microbatches — the activation-
+memory lever the grok-1 dry-run needs, EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_loss
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, OptState, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    microbatches: int = 1          # grad-accum splits of the global batch
+    aux_weight: float = 0.01
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B//n, ...) for every leaf."""
+    def f(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def loss_and_grads(cfg: ModelConfig, tcfg: TrainConfig, params,
+                   batch: dict):
+    """Grad through the model, with microbatch accumulation if asked."""
+    def loss_fn(p, b):
+        return lm_loss(cfg, p, b, aux_weight=tcfg.aux_weight)
+
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    micro = _split_micro(batch, tcfg.microbatches)
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        acc_g, acc_l = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                             acc_g, grads)
+        return (acc_g, acc_l + loss), metrics
+
+    (grads, loss_sum), metricses = jax.lax.scan(
+        body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+    inv = 1.0 / tcfg.microbatches
+    grads = jax.tree.map(lambda g: g * inv, grads)
+    metrics = jax.tree.map(lambda m: jnp.mean(m), metricses)
+    return loss_sum * inv, metrics, grads
+
+
+def train_step(cfg: ModelConfig, tcfg: TrainConfig, params,
+               opt_state: OptState, batch: dict):
+    """One optimizer step.  Returns (params, opt_state, metrics)."""
+    loss, metrics, grads = loss_and_grads(cfg, tcfg, params, batch)
+    params, opt_state, opt_metrics = adamw_update(
+        tcfg.optimizer, params, grads, opt_state)
+    metrics = dict(metrics)
+    metrics.update(opt_metrics)
+    metrics["loss"] = loss
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Closure suitable for jax.jit(..., donate_argnums=(0, 1))."""
+    def step(params, opt_state, batch):
+        return train_step(cfg, tcfg, params, opt_state, batch)
+
+    return step

@@ -1,0 +1,208 @@
+"""Unit + property tests for the Berrut coded-computation core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import berrut
+from repro.core.berrut import CodingConfig
+
+
+class TestNodes:
+    def test_chebyshev_first_kind_values(self):
+        a = berrut.chebyshev_first_kind(2)
+        np.testing.assert_allclose(a, [np.cos(np.pi / 4), np.cos(3 * np.pi / 4)],
+                                   atol=1e-12)
+
+    def test_chebyshev_second_kind_values(self):
+        b = berrut.chebyshev_second_kind(2)
+        np.testing.assert_allclose(b, [1.0, 0.0, -1.0], atol=1e-12)
+
+    @pytest.mark.parametrize("k,s,e", [(2, 1, 0), (8, 1, 0), (8, 3, 0),
+                                       (12, 0, 3), (4, 2, 2), (1, 1, 0)])
+    def test_worker_counts(self, k, s, e):
+        cfg = CodingConfig(k=k, s=s, e=e)
+        expect_n = (k + s - 1) if e == 0 else (2 * (k + e) + s - 1)
+        assert cfg.n == expect_n
+        assert cfg.num_workers == expect_n + 1
+        assert cfg.wait_for == (k if e == 0 else 2 * (k + e))
+
+
+class TestBasisMatrix:
+    def test_interpolates_nodes_exactly(self):
+        """l_i(x_j) = delta_ij — evaluating at the nodes reproduces them."""
+        nodes = berrut.chebyshev_first_kind(6)
+        m = berrut.basis_matrix(nodes, nodes, berrut.berrut_weights(6))
+        np.testing.assert_allclose(np.asarray(m), np.eye(6), atol=1e-5)
+
+    def test_rows_sum_to_one(self):
+        """Barycentric bases form a partition of unity."""
+        cfg = CodingConfig(k=8, s=2)
+        m = berrut.encode_matrix(cfg)
+        np.testing.assert_allclose(np.asarray(m).sum(-1),
+                                   np.ones(cfg.num_workers), atol=1e-5)
+
+    def test_grid_collision_handled(self):
+        """K=2, S=3 => beta grid intersects alpha grid (removable pole)."""
+        cfg = CodingConfig(k=2, s=3)
+        m = np.asarray(berrut.encode_matrix(cfg))
+        assert np.all(np.isfinite(m))
+        np.testing.assert_allclose(m.sum(-1), np.ones(cfg.num_workers),
+                                   atol=1e-5)
+
+    def test_masked_decode_partition_of_unity(self):
+        cfg = CodingConfig(k=4, s=2)
+        mask = jnp.array([1, 0, 1, 1, 0, 1], jnp.float32)
+        m = np.asarray(berrut.decode_matrix(cfg, mask))
+        # masked-out columns contribute nothing
+        assert np.abs(m[:, 1]).max() == 0
+        assert np.abs(m[:, 4]).max() == 0
+        np.testing.assert_allclose(m.sum(-1), np.ones(cfg.k), atol=1e-5)
+
+
+class TestEncodeDecode:
+    def test_linear_model_exact_no_straggler_k1(self):
+        """K=1 coding is replication: decode is exact for any f."""
+        cfg = CodingConfig(k=1, s=2)
+        x = jnp.arange(6.0).reshape(1, 6)
+        coded = berrut.encode(cfg, x, axis=0)
+        preds = coded * 3.0 + 1.0
+        out = berrut.decode(cfg, preds, jnp.ones(cfg.num_workers), axis=0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 3 + 1,
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("k,s", [(2, 1), (4, 1), (8, 1), (8, 3), (12, 1)])
+    def test_identity_model_roundtrip(self, k, s):
+        """With f = id and no stragglers, decode(encode(X)) ~ X.
+
+        Berrut interpolation of a *linear* function of the node is exact up
+        to interpolant approximation error; empirically the roundtrip is
+        tight because r(z) interpolates u(z) at N+1 >= K points.
+        """
+        cfg = CodingConfig(k=k, s=s)
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.randn(k, 16), jnp.float32)
+        coded = berrut.encode(cfg, x, axis=0)
+        out = berrut.decode(cfg, coded, jnp.ones(cfg.num_workers), axis=0)
+        err = np.abs(np.asarray(out) - np.asarray(x)).max()
+        assert err < 1.6, f"roundtrip err {err}"
+
+    @pytest.mark.parametrize("k,s", [(4, 1), (8, 1), (8, 2), (8, 3)])
+    def test_straggler_recovery_linear_f(self, k, s):
+        """Drop any S workers; for affine f the decode stays accurate."""
+        cfg = CodingConfig(k=k, s=s)
+        rng = np.random.RandomState(1)
+        x = jnp.asarray(rng.randn(k, 8), jnp.float32)
+        w = jnp.asarray(rng.randn(8, 5), jnp.float32)
+
+        def f(q):
+            return q @ w + 0.5
+
+        coded = berrut.encode(cfg, x, axis=0)
+        preds = f(coded)
+        full = berrut.decode(cfg, preds, jnp.ones(cfg.num_workers), axis=0)
+        ref = f(x)
+        scale = np.abs(np.asarray(ref)).max()
+        assert np.abs(np.asarray(full) - np.asarray(ref)).max() < 0.8 * scale
+        # ANY S-subset of workers may straggle.  With survivor-renumbered
+        # alternating weights (no-pole condition) the worst case stays
+        # bounded; with the paper's literal (-1)^i weights it blows up ~14x.
+        import itertools
+        worst = 0.0
+        for di in itertools.combinations(range(cfg.num_workers), s):
+            mask = jnp.ones(cfg.num_workers).at[jnp.asarray(di)].set(0.0)
+            dropped = np.asarray(berrut.decode(cfg, preds, mask, axis=0))
+            assert np.all(np.isfinite(dropped))
+            worst = max(worst, np.abs(dropped - np.asarray(ref)).max())
+        assert worst < (1.0 + s) * scale, f"worst-case drop err {worst}"
+
+    def test_encode_is_linear(self):
+        cfg = CodingConfig(k=4, s=1)
+        rng = np.random.RandomState(2)
+        a = jnp.asarray(rng.randn(4, 3), jnp.float32)
+        b = jnp.asarray(rng.randn(4, 3), jnp.float32)
+        lhs = berrut.encode(cfg, 2.0 * a + b, axis=0)
+        rhs = 2.0 * berrut.encode(cfg, a, axis=0) + berrut.encode(cfg, b, axis=0)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(2, 12), s=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_roundtrip_bounded(k, s, seed):
+    """Property: identity-model roundtrip error is uniformly small for any
+    (K, S) in the paper's range and any query content."""
+    cfg = CodingConfig(k=k, s=s)
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(k, 4)), jnp.float32)
+    coded = berrut.encode(cfg, x, axis=0)
+    out = berrut.decode(cfg, coded, jnp.ones(cfg.num_workers), axis=0)
+    assert np.abs(np.asarray(out) - np.asarray(x)).max() < 2.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(2, 10), e=st.integers(1, 3))
+def test_property_worker_savings(k, e):
+    """Paper claim (§1 contribution 2): to tolerate E Byzantine workers
+    ApproxIFER needs 2K+2E workers vs replication's (2E+1)K."""
+    cfg = CodingConfig(k=k, s=0, e=e)
+    from repro.core.replication import replication_workers
+    rep = replication_workers(k, 0, e)
+    assert cfg.num_workers == 2 * (k + e)
+    assert cfg.num_workers <= rep
+
+
+class TestSystematicCoding:
+    """Beyond-paper: systematic node sets (EXPERIMENTS.md §6)."""
+
+    @pytest.mark.parametrize("k,s", [(4, 1), (8, 1), (8, 2), (12, 1)])
+    def test_exact_without_failures(self, k, s):
+        """No stragglers => decode is EXACT for ANY model f."""
+        cfg = CodingConfig(k=k, s=s, systematic=True)
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.randn(k, 8), jnp.float32)
+
+        def f(q):
+            return jnp.tanh(q) * 3.0 + q ** 2 * 0.1
+
+        preds = f(berrut.encode(cfg, x, axis=0))
+        out = berrut.decode(cfg, preds, jnp.ones(cfg.num_workers), axis=0)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(f(x)))
+
+    def test_first_k_workers_hold_real_queries(self):
+        cfg = CodingConfig(k=8, s=2, systematic=True)
+        w = np.asarray(berrut.encode_matrix(cfg))
+        onehot_rows = sum(
+            1 for i in range(cfg.num_workers)
+            if np.count_nonzero(np.round(w[i], 6)) == 1
+            and np.isclose(np.abs(w[i]).max(), 1.0))
+        assert onehot_rows == cfg.k
+
+    @pytest.mark.parametrize("k,s", [(8, 1), (8, 2)])
+    def test_straggler_fallback_bounded(self, k, s):
+        """Dropping any S workers (incl. systematic ones) stays finite and
+        bounded; queries whose systematic worker survived stay EXACT."""
+        cfg = CodingConfig(k=k, s=s, systematic=True)
+        rng = np.random.RandomState(1)
+        x = jnp.asarray(rng.randn(k, 8), jnp.float32)
+
+        def f(q):
+            return jnp.tanh(q)
+
+        preds = f(berrut.encode(cfg, x, axis=0))
+        ref = np.asarray(f(x))
+        import itertools
+        for di in itertools.combinations(range(cfg.num_workers), s):
+            mask = jnp.ones(cfg.num_workers).at[jnp.asarray(di)].set(0.0)
+            out = np.asarray(berrut.decode(cfg, preds, mask, axis=0))
+            assert np.all(np.isfinite(out))
+            assert np.abs(out - ref).max() < 4.0
+        # drop only NON-systematic (parity) workers: still exact
+        w = np.asarray(berrut.encode_matrix(cfg))
+        parity = [i for i in range(cfg.num_workers)
+                  if np.count_nonzero(np.round(w[i], 6)) > 1][:s]
+        mask = jnp.ones(cfg.num_workers).at[jnp.asarray(parity)].set(0.0)
+        out = np.asarray(berrut.decode(cfg, preds, mask, axis=0))
+        np.testing.assert_allclose(out, ref, atol=1e-6)

@@ -1,0 +1,184 @@
+"""End-to-end tests of the coded-inference engine against a real model f."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ApproxIFEREngine, CodingConfig, coded_inference,
+                        parm_inference, replicated_inference)
+
+
+def _mlp_classifier(seed=0, d_in=16, d_h=64, n_cls=10):
+    """A small but genuinely nonlinear classifier f."""
+    rng = np.random.RandomState(seed)
+    w1 = jnp.asarray(rng.randn(d_in, d_h) / np.sqrt(d_in), jnp.float32)
+    w2 = jnp.asarray(rng.randn(d_h, n_cls) / np.sqrt(d_h), jnp.float32)
+
+    def f(x):
+        return jax.nn.tanh(x @ w1) @ w2
+
+    return f
+
+
+def _queries(seed, b, d):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(b, d), jnp.float32)
+
+
+class TestCodedInference:
+    def test_no_failures_close_to_base(self):
+        f = _mlp_classifier()
+        cfg = CodingConfig(k=8, s=1)
+        x = _queries(1, 32, 16)
+        out = coded_inference(f, cfg, x)
+        base = f(x)
+        agree = (np.argmax(np.asarray(out), -1)
+                 == np.argmax(np.asarray(base), -1)).mean()
+        assert out.shape == base.shape
+        assert agree >= 0.7, f"argmax agreement {agree}"
+
+    @pytest.mark.parametrize("s_actual", [1, 2])
+    def test_straggler_recovery(self, s_actual):
+        f = _mlp_classifier()
+        cfg = CodingConfig(k=8, s=2)
+        x = _queries(2, 32, 16)
+        mask = jnp.ones(cfg.num_workers).at[jnp.asarray([3, 7][:s_actual])].set(0.0)
+        out = coded_inference(f, cfg, x, straggler_mask=mask)
+        base = f(x)
+        agree = (np.argmax(np.asarray(out), -1)
+                 == np.argmax(np.asarray(base), -1)).mean()
+        assert agree >= 0.6, f"argmax agreement {agree}"
+
+    def test_byzantine_located_and_excluded(self):
+        f = _mlp_classifier()
+        cfg = CodingConfig(k=8, s=0, e=2, c_vote=10)
+        x = _queries(3, 16, 16)
+        byz = jnp.zeros(cfg.num_workers).at[jnp.asarray([5, 11])].set(1.0)
+        out = coded_inference(f, cfg, x, byz_mask=byz,
+                              byz_rng=jax.random.PRNGKey(0), byz_sigma=100.0)
+        base = f(x)
+        agree = (np.argmax(np.asarray(out), -1)
+                 == np.argmax(np.asarray(base), -1)).mean()
+        assert np.all(np.isfinite(np.asarray(out)))
+        assert agree >= 0.6, f"argmax agreement with byzantine {agree}"
+
+    def test_byzantine_without_locator_is_garbage(self):
+        """Sanity: the locator is doing real work — decoding *with* the
+        corrupted workers destroys the predictions."""
+        f = _mlp_classifier()
+        cfg = CodingConfig(k=8, s=0, e=2, c_vote=10)
+        x = _queries(3, 16, 16)
+        from repro.core import berrut, engine
+        grouped = engine.group_queries(x, cfg.k)
+        coded = engine.encode_groups(cfg, grouped)
+        flat = coded.reshape(-1, *coded.shape[2:])
+        preds = f(flat).reshape(coded.shape[0], cfg.num_workers, -1)
+        byz = jnp.zeros(cfg.num_workers).at[jnp.asarray([5, 11])].set(1.0)
+        preds = engine.apply_byzantine(preds, byz, jax.random.PRNGKey(0), 100.0)
+        naive = engine.ungroup(
+            engine.decode_groups(cfg, preds, jnp.ones(cfg.num_workers)))
+        base = f(x)
+        agree = (np.argmax(np.asarray(naive), -1)
+                 == np.argmax(np.asarray(base), -1)).mean()
+        assert agree < 0.6
+
+    def test_engine_wrapper(self):
+        f = _mlp_classifier()
+        eng = ApproxIFEREngine(f, CodingConfig(k=4, s=1))
+        x = _queries(5, 8, 16)
+        np.testing.assert_allclose(np.asarray(eng(x)),
+                                   np.asarray(coded_inference(f, eng.cfg, x)),
+                                   atol=1e-5)
+
+    def test_jit_compatible(self):
+        f = _mlp_classifier()
+        cfg = CodingConfig(k=4, s=1)
+
+        @jax.jit
+        def step(x, mask):
+            return coded_inference(f, cfg, x, straggler_mask=mask)
+
+        x = _queries(6, 8, 16)
+        out = step(x, jnp.ones(cfg.num_workers))
+        assert out.shape == (8, 10)
+
+
+class TestBaselines:
+    def test_replication_straggler(self):
+        f = _mlp_classifier()
+        x = _queries(7, 8, 16)
+        mask = jnp.array([0.0, 1.0])  # first replica straggles
+        out = replicated_inference(f, x, s=1, straggler_mask=mask)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(f(x)),
+                                   atol=1e-5)
+
+    def test_replication_byzantine_median(self):
+        f = _mlp_classifier()
+        x = _queries(8, 8, 16)
+        byz = jnp.array([0.0, 1.0, 0.0])  # 1 of 3 replicas corrupted
+        out = replicated_inference(f, x, e=1, byz_mask=byz,
+                                   byz_rng=jax.random.PRNGKey(1),
+                                   byz_sigma=100.0)
+        agree = (np.argmax(np.asarray(out), -1)
+                 == np.argmax(np.asarray(f(x)), -1)).mean()
+        assert agree == 1.0
+
+    def test_parm_exact_for_linear_model(self):
+        """ParM reconstruction is exact when f_P is the ideal parity of a
+        linear f (its existence assumption)."""
+        rng = np.random.RandomState(9)
+        w = jnp.asarray(rng.randn(16, 10), jnp.float32)
+
+        def f(x):
+            return x @ w
+
+        out = parm_inference(f, f, _queries(10, 8, 16), k=4, straggler=2)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(f(_queries(10, 8, 16))),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestSystematicEngine:
+    """Systematic coding through the full engine (beyond-paper)."""
+
+    def test_exact_predictions_without_failures(self):
+        f = _mlp_classifier()
+        cfg = CodingConfig(k=8, s=1, systematic=True)
+        x = _queries(20, 32, 16)
+        out = coded_inference(f, cfg, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(f(x)),
+                                   atol=1e-5)
+
+    def test_straggler_still_recovers(self):
+        f = _mlp_classifier()
+        cfg = CodingConfig(k=8, s=1, systematic=True)
+        x = _queries(21, 32, 16)
+        base = f(x)
+        for drop in range(cfg.num_workers):
+            mask = jnp.ones(cfg.num_workers).at[drop].set(0.0)
+            out = coded_inference(f, cfg, x, straggler_mask=mask)
+            agree = (np.argmax(np.asarray(out), -1)
+                     == np.argmax(np.asarray(base), -1)).mean()
+            assert agree >= 0.7, f"drop={drop}: {agree}"
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(2, 8), s=st.integers(1, 2),
+       seed=st.integers(0, 500), systematic=st.booleans())
+def test_property_engine_finite_any_single_straggler(k, s, seed,
+                                                     systematic):
+    """Property: for any (K, S, node layout) and any single straggler the
+    engine output is finite and shaped correctly."""
+    f = _mlp_classifier(seed=seed % 5)
+    cfg = CodingConfig(k=k, s=s, systematic=systematic)
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(k * 2, 16), jnp.float32)
+    drop = rng.randint(cfg.num_workers)
+    mask = jnp.ones(cfg.num_workers).at[drop].set(0.0)
+    out = coded_inference(f, cfg, x, straggler_mask=mask)
+    assert out.shape == (k * 2, 10)
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,276 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles,
+swept over shapes and dtypes (assignment deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.berrut_matmul import berrut_apply
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ssd_scan import ssd_chunked
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.randn(*shape), jnp.float32).astype(dtype)
+
+
+class TestBerrutMatmul:
+    @pytest.mark.parametrize("o,i", [(9, 8), (5, 4), (21, 12), (2, 1)])
+    @pytest.mark.parametrize("f", [128, 384, 200])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, o, i, f, dtype):
+        rng = np.random.RandomState(o * 100 + f)
+        w = _rand(rng, (o, i), jnp.float32)
+        x = _rand(rng, (3, i, f), dtype)
+        got = berrut_apply(w, x, interpret=True)
+        want = ref.berrut_apply_ref(w, x)
+        assert got.shape == want.shape and got.dtype == want.dtype
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    def test_high_rank_batch(self):
+        rng = np.random.RandomState(0)
+        w = _rand(rng, (6, 4), jnp.float32)
+        x = _rand(rng, (2, 5, 4, 256), jnp.float32)
+        got = berrut_apply(w, x, interpret=True)
+        want = ref.berrut_apply_ref(w, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,h,kv,d", [(256, 4, 4, 64), (256, 8, 2, 64),
+                                          (384, 4, 1, 128), (130, 2, 2, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_gqa(self, s, h, kv, d, dtype):
+        rng = np.random.RandomState(s + h)
+        q = _rand(rng, (2, s, h, d), dtype)
+        k = _rand(rng, (2, s, kv, d), dtype)
+        v = _rand(rng, (2, s, kv, d), dtype)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    @pytest.mark.parametrize("window", [64, 128, 200])
+    def test_sliding_window(self, window):
+        rng = np.random.RandomState(window)
+        q = _rand(rng, (1, 384, 2, 64), jnp.float32)
+        k = _rand(rng, (1, 384, 2, 64), jnp.float32)
+        v = _rand(rng, (1, 384, 2, 64), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_prefix_lm(self):
+        rng = np.random.RandomState(1)
+        q = _rand(rng, (1, 256, 2, 64), jnp.float32)
+        k = _rand(rng, (1, 256, 2, 64), jnp.float32)
+        v = _rand(rng, (1, 256, 2, 64), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, prefix=96,
+                              interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, prefix=96)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_bidirectional_and_softcap(self):
+        rng = np.random.RandomState(2)
+        q = _rand(rng, (1, 128, 2, 64), jnp.float32)
+        k = _rand(rng, (1, 128, 2, 64), jnp.float32)
+        v = _rand(rng, (1, 128, 2, 64), jnp.float32)
+        got = flash_attention(q, k, v, causal=False, softcap=30.0,
+                              interpret=True)
+        want = ref.attention_ref(q, k, v, causal=False, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("w,h,kv,d", [(1024, 8, 8, 64), (600, 8, 2, 64),
+                                          (2048, 4, 1, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, w, h, kv, d, dtype):
+        rng = np.random.RandomState(w + h)
+        q = _rand(rng, (3, h, d), dtype)
+        kc = _rand(rng, (3, w, kv, d), dtype)
+        vc = _rand(rng, (3, w, kv, d), dtype)
+        # ragged validity (ring buffer partially filled per stream)
+        valid = jnp.asarray(
+            np.arange(w)[None, :] < np.array([[w], [w // 2], [7]]))
+        got = flash_decode(q, kc, vc, valid, interpret=True)
+        want = ref.decode_attention_ref(q, kc, vc, valid)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    def test_softcap(self):
+        rng = np.random.RandomState(3)
+        q = _rand(rng, (2, 4, 64), jnp.float32)
+        kc = _rand(rng, (2, 512, 2, 64), jnp.float32)
+        vc = _rand(rng, (2, 512, 2, 64), jnp.float32)
+        valid = jnp.ones((2, 512), bool)
+        got = flash_decode(q, kc, vc, valid, softcap=30.0, interpret=True)
+        want = ref.decode_attention_ref(q, kc, vc, valid, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestSSDScan:
+    def _inputs(self, rng, b, s, h, p, n, dtype):
+        x = _rand(rng, (b, s, h, p), dtype)
+        dt = jnp.abs(_rand(rng, (b, s, h), jnp.float32)) * 0.1 + 0.01
+        a_log = jnp.asarray(np.log(np.linspace(1.0, 4.0, h)), jnp.float32)
+        bb = _rand(rng, (b, s, n), dtype) * 0.5
+        cc = _rand(rng, (b, s, n), dtype) * 0.5
+        d_skip = jnp.ones((h,), jnp.float32)
+        return x, dt, a_log, bb, cc, d_skip
+
+    @pytest.mark.parametrize("s,chunk", [(256, 64), (256, 128), (192, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_kernel_matches_chunked_ref(self, s, chunk, dtype):
+        rng = np.random.RandomState(s + chunk)
+        args = self._inputs(rng, 2, s, 3, 32, 16, dtype)
+        y_k, h_k = ssd_chunked(*args, chunk=chunk, interpret=True)
+        y_r, h_r = ref.ssd_chunked_ref(*args, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   **TOL[dtype])
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                                   rtol=1e-3 if dtype == jnp.bfloat16
+                                   else 1e-4, atol=1e-3)
+
+    def test_chunked_ref_matches_sequential_oracle(self):
+        """The chunked algorithm == the exact recurrence (both refs)."""
+        rng = np.random.RandomState(7)
+        args = self._inputs(rng, 2, 128, 4, 16, 8, jnp.float32)
+        y_c, h_c = ref.ssd_chunked_ref(*args, chunk=32)
+        y_s, h_s = ref.ssd_scan_ref(*args)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_s),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_initial_state_carried(self):
+        """Chunked with h0 == running the recurrence from that state —
+        the property coded SSM streams rely on (DESIGN.md §4)."""
+        rng = np.random.RandomState(9)
+        x, dt, a_log, bb, cc, d_skip = self._inputs(
+            rng, 1, 128, 2, 16, 8, jnp.float32)
+        # run first half, then second half with carried state
+        y1, h1 = ref.ssd_chunked_ref(x[:, :64], dt[:, :64], a_log,
+                                     bb[:, :64], cc[:, :64], d_skip,
+                                     chunk=32)
+        y2k, h2k = ssd_chunked(x[:, 64:], dt[:, 64:], a_log, bb[:, 64:],
+                               cc[:, 64:], d_skip, h0=h1, chunk=32,
+                               interpret=True)
+        y_full, h_full = ref.ssd_scan_ref(x, dt, a_log, bb, cc, d_skip)
+        np.testing.assert_allclose(np.asarray(y2k),
+                                   np.asarray(y_full[:, 64:]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h2k), np.asarray(h_full),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_ssd_step_consistent_with_scan(self):
+        """Single-token decode step chains to the full scan (serving)."""
+        rng = np.random.RandomState(11)
+        x, dt, a_log, bb, cc, d_skip = self._inputs(
+            rng, 1, 8, 2, 16, 8, jnp.float32)
+        _, h_ref = ref.ssd_scan_ref(x, dt, a_log, bb, cc, d_skip)
+        h = jnp.zeros((1, 2, 16, 8), jnp.float32)
+        for t in range(8):
+            y_t, h = ref.ssd_step_ref(h, x[:, t], dt[:, t], a_log,
+                                      bb[:, t], cc[:, t], d_skip)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestBlockedAttention:
+    """XLA flash-style blocked attention == naive reference (§Perf)."""
+
+    @pytest.mark.parametrize("s,l,h,kv", [(256, 256, 4, 2), (128, 384, 2, 1)])
+    @pytest.mark.parametrize("block", [64, 128, 1000])
+    def test_causal(self, s, l, h, kv, block):
+        rng = np.random.RandomState(s + block)
+        q = _rand(rng, (2, s, h, 64), jnp.float32)
+        k = _rand(rng, (2, l, kv, 64), jnp.float32)
+        v = _rand(rng, (2, l, kv, 64), jnp.float32)
+        got = ref.attention_blocked(q, k, v, causal=True, block=block)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_window_prefix_softcap(self):
+        rng = np.random.RandomState(5)
+        q = _rand(rng, (1, 256, 2, 64), jnp.float32)
+        k = _rand(rng, (1, 256, 2, 64), jnp.float32)
+        v = _rand(rng, (1, 256, 2, 64), jnp.float32)
+        for kw in (dict(window=64), dict(prefix=96), dict(softcap=20.0),
+                   dict(window=100, softcap=15.0)):
+            got = ref.attention_blocked(q, k, v, causal=True, block=96,
+                                        **kw)
+            want = ref.attention_ref(q, k, v, causal=True, **kw)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=3e-5, atol=3e-5, err_msg=str(kw))
+
+    def test_bidirectional(self):
+        rng = np.random.RandomState(6)
+        q = _rand(rng, (1, 128, 2, 32), jnp.float32)
+        k = _rand(rng, (1, 128, 2, 32), jnp.float32)
+        v = _rand(rng, (1, 128, 2, 32), jnp.float32)
+        got = ref.attention_blocked(q, k, v, causal=False, block=64)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestFlashDecodeInt8:
+    """In-kernel int8 dequantisation (EXPERIMENTS.md §5.3 iter 1 on TPU)."""
+
+    @pytest.mark.parametrize("w,h,kv", [(1024, 4, 2), (600, 8, 8)])
+    def test_matches_dequantised_ref(self, w, h, kv):
+        from repro.models.attention import INT8_KV_SCALE
+        rng = np.random.RandomState(w)
+        d = 64
+        q = _rand(rng, (2, h, d), jnp.float32)
+        kf = _rand(rng, (2, w, kv, d), jnp.float32)
+        vf = _rand(rng, (2, w, kv, d), jnp.float32)
+        k8 = jnp.clip(jnp.round(kf * INT8_KV_SCALE), -127, 127
+                      ).astype(jnp.int8)
+        v8 = jnp.clip(jnp.round(vf * INT8_KV_SCALE), -127, 127
+                      ).astype(jnp.int8)
+        valid = jnp.asarray(np.arange(w)[None, :] < np.array([[w], [w // 3]]))
+        got = flash_decode(q, k8, v8, valid, kv_scale=INT8_KV_SCALE,
+                           interpret=True)
+        want = ref.decode_attention_ref(
+            q, k8.astype(jnp.float32) / INT8_KV_SCALE,
+            v8.astype(jnp.float32) / INT8_KV_SCALE, valid)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_close_to_unquantised(self):
+        """Quantisation noise is small relative to the attention output."""
+        from repro.models.attention import INT8_KV_SCALE
+        rng = np.random.RandomState(1)
+        q = _rand(rng, (1, 4, 64), jnp.float32)
+        kf = _rand(rng, (1, 512, 2, 64), jnp.float32)
+        vf = _rand(rng, (1, 512, 2, 64), jnp.float32)
+        k8 = jnp.clip(jnp.round(kf * INT8_KV_SCALE), -127, 127
+                      ).astype(jnp.int8)
+        v8 = jnp.clip(jnp.round(vf * INT8_KV_SCALE), -127, 127
+                      ).astype(jnp.int8)
+        valid = jnp.ones((1, 512), bool)
+        got = flash_decode(q, k8, v8, valid, kv_scale=INT8_KV_SCALE,
+                           interpret=True)
+        want = ref.decode_attention_ref(q, kf, vf, valid)
+        err = np.abs(np.asarray(got) - np.asarray(want)).max()
+        assert err < 0.05, err

@@ -1,0 +1,171 @@
+"""Component-level model tests: RoPE, norms, masks, MoE invariants,
+Mamba2 properties, latency simulator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.core.berrut import CodingConfig
+from repro.kernels import ref
+from repro.models import layers, moe
+from repro.models.config import ModelConfig
+from repro.serving.latency import (LatencyModel, percentile_table,
+                                   simulate_approxifer)
+
+
+def _cfg(**kw):
+    base = dict(name="t", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestRoPE:
+    def test_rotation_preserves_norm(self):
+        cfg = _cfg()
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+        y = layers.apply_rope(cfg, x, jnp.arange(8))
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_position_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m - n."""
+        cfg = _cfg(head_dim=16)
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+
+        def dot(m, n):
+            qm = layers.apply_rope(cfg, q, jnp.asarray([m]))
+            kn = layers.apply_rope(cfg, k, jnp.asarray([n]))
+            return float(jnp.sum(qm * kn))
+
+        assert abs(dot(5, 3) - dot(10, 8)) < 1e-4
+        assert abs(dot(5, 3) - dot(7, 3)) > 1e-6  # but not constant
+
+    def test_partial_rotary_leaves_tail_alone(self):
+        cfg = _cfg(rotary_pct=0.25, head_dim=16)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 2, 16))
+        y = layers.apply_rope(cfg, x, jnp.arange(4))
+        np.testing.assert_array_equal(np.asarray(x[..., 4:]),
+                                      np.asarray(y[..., 4:]))
+
+
+class TestNorms:
+    def test_rmsnorm_unit_rms(self):
+        cfg = _cfg()
+        p = layers.init_norm(cfg, jnp.float32)
+        x = 10.0 * jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+        y = np.asarray(layers.apply_norm(cfg, p, x))
+        np.testing.assert_allclose(np.sqrt((y ** 2).mean(-1)), 1.0,
+                                   rtol=1e-4)
+
+    def test_layernorm_zero_mean(self):
+        cfg = _cfg(norm_type="layernorm")
+        p = layers.init_norm(cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64)) + 3.0
+        y = np.asarray(layers.apply_norm(cfg, p, x))
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+
+
+class TestMasks:
+    def test_sliding_window_band(self):
+        bias = np.asarray(ref._mask_bias(8, 8, causal=True, window=3,
+                                         prefix=0))
+        for q in range(8):
+            for k in range(8):
+                allowed = (k <= q) and (k > q - 3)
+                assert (bias[q, k] == 0.0) == allowed
+
+    def test_prefix_lm(self):
+        bias = np.asarray(ref._mask_bias(6, 6, causal=True, window=None,
+                                         prefix=3))
+        assert (bias[0, :3] == 0).all()       # prefix bidirectional
+        assert bias[0, 4] < 0                 # future suffix masked
+
+
+class TestMoE:
+    def _setup(self, e=4, k=2, cap_factor=4.0):
+        cfg = _cfg(arch_type="moe", num_experts=e, experts_per_token=k,
+                   moe_d_ff=32, capacity_factor=cap_factor,
+                   moe_group_size=64, layer_pattern="MM")
+        p = moe.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+        return cfg, p
+
+    def test_output_shape_and_aux(self):
+        cfg, p = self._setup()
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+        y, aux = moe.moe_block(cfg, p, x)
+        assert y.shape == x.shape
+        assert float(aux["dropped_fraction"]) == 0.0   # dropless capacity
+        assert float(aux["load_balance_loss"]) >= 1.0 - 1e-3  # >= 1 at opt
+
+    def test_low_capacity_drops_tokens(self):
+        cfg, p = self._setup(cap_factor=0.1)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 64))
+        _, aux = moe.moe_block(cfg, p, x)
+        assert float(aux["dropped_fraction"]) > 0.0
+
+    def test_permutation_equivariance_over_tokens(self):
+        """Without drops, MoE output is per-token: permuting the batch
+        permutes the output."""
+        cfg, p = self._setup(cap_factor=8.0)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 64))
+        perm = jax.random.permutation(jax.random.PRNGKey(4), 16)
+        y1, _ = moe.moe_block(cfg, p, x)
+        y2, _ = moe.moe_block(cfg, p, x[:, perm])
+        np.testing.assert_allclose(np.asarray(y1[:, perm]),
+                                   np.asarray(y2), rtol=2e-4, atol=2e-5)
+
+
+class TestMamba2Properties:
+    def test_decay_reduces_memory_of_past(self):
+        """Larger dt => stronger decay => old state contributes less."""
+        b, s, h, p, n = 1, 4, 1, 4, 4
+        rng = np.random.RandomState(0)
+        x = jnp.zeros((b, s, h, p))
+        a_log = jnp.zeros((h,))
+        bb = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+        cc = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+        h0 = jnp.ones((b, h, p, n))
+        for dt_small, dt_big in [(0.01, 2.0)]:
+            _, hf_s = ref.ssd_scan_ref(x, jnp.full((b, s, h), dt_small),
+                                       a_log, bb, cc, jnp.zeros((h,)), h0)
+            _, hf_b = ref.ssd_scan_ref(x, jnp.full((b, s, h), dt_big),
+                                       a_log, bb, cc, jnp.zeros((h,)), h0)
+            assert np.abs(np.asarray(hf_b)).sum() < \
+                np.abs(np.asarray(hf_s)).sum()
+
+
+class TestLatencySimulator:
+    def test_approxifer_beats_unprotected_tail(self):
+        model = LatencyModel()
+        table = percentile_table(model, k=8, s=1, trials=5000)
+        assert table["approxifer"]["p99_ms"] < table["none"]["p99_ms"] / 2
+        assert table["approxifer"]["workers"] == 9
+        assert table["replication"]["workers"] == 16
+
+    def test_masks_match_wait_for(self):
+        coding = CodingConfig(k=8, s=2)
+        _, masks = simulate_approxifer(LatencyModel(), coding, trials=100)
+        assert masks.shape == (100, coding.num_workers)
+        np.testing.assert_array_equal(masks.sum(1),
+                                      coding.wait_for)
+
+
+@settings(max_examples=15, deadline=None)
+@given(e=st.integers(2, 8), topk=st.integers(1, 2),
+       seed=st.integers(0, 1000))
+def test_property_moe_router_probs_normalised(e, topk, seed):
+    cfg = _cfg(arch_type="moe", num_experts=e,
+               experts_per_token=min(topk, e), moe_d_ff=16,
+               layer_pattern="MM")
+    p = moe.init_moe(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 8, 64))
+    top_p, top_i, full = moe.router_probs(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(top_p.sum(-1)), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(full.sum(-1)), 1.0, rtol=1e-4)
+    assert int(top_i.max()) < e

@@ -1,0 +1,203 @@
+"""Substrate tests: optimizer, training loop, checkpoint, data, batcher,
+and the coded serving steps end-to-end on a reduced model."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import latest_step, load, save, step_path
+from repro.core.berrut import CodingConfig
+from repro.data import ShardedLoader, SyntheticLMDataset
+from repro.models import decode_step, forward, init_caches, init_params, prefill
+from repro.optim import OptimizerConfig, init_opt_state, learning_rate
+from repro.serving import (GroupBatcher, coded_decode_step, coded_prefill,
+                           sample_byzantine_mask, sample_straggler_mask)
+from repro.training import TrainConfig, train_step
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = configs.get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestOptimizer:
+    def test_lr_schedule(self):
+        ocfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10,
+                               total_steps=100, schedule="cosine")
+        assert float(learning_rate(ocfg, jnp.asarray(0))) == 0.0
+        assert abs(float(learning_rate(ocfg, jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(learning_rate(ocfg, jnp.asarray(100))) < 1e-6
+
+    def test_loss_decreases_over_steps(self, small_lm):
+        cfg, params = small_lm
+        tcfg = TrainConfig(optimizer=OptimizerConfig(
+            learning_rate=3e-3, warmup_steps=5, total_steps=60))
+        ds = SyntheticLMDataset(cfg.vocab_size, seq_len=32, seed=0)
+        opt = init_opt_state(params)
+        step = jax.jit(lambda p, o, b: train_step(cfg, tcfg, p, o, b))
+        rng = np.random.RandomState(0)
+        losses = []
+        for i in range(30):
+            batch = {k: jnp.asarray(v)
+                     for k, v in ds.batch(8, rng).items()}
+            params, opt, metrics = step(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.3, losses[::6]
+        assert np.isfinite(losses).all()
+
+    def test_microbatch_matches_full_batch_grads(self, small_lm):
+        cfg, params = small_lm
+        from repro.training.train import loss_and_grads
+        ds = SyntheticLMDataset(cfg.vocab_size, seq_len=16, seed=1)
+        batch = {k: jnp.asarray(v) for k, v in
+                 ds.batch(8, np.random.RandomState(1)).items()}
+        _, _, g1 = loss_and_grads(cfg, TrainConfig(microbatches=1),
+                                  params, batch)
+        _, _, g2 = loss_and_grads(cfg, TrainConfig(microbatches=4),
+                                  params, batch)
+        l1, l2 = jax.tree.leaves(g1), jax.tree.leaves(g2)
+        for a, b in zip(l1, l2):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-3, atol=2e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, small_lm, tmp_path):
+        cfg, params = small_lm
+        path = step_path(str(tmp_path), 42)
+        save(path, params, metadata={"step": 42, "arch": cfg.name})
+        restored = load(path, params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert latest_step(str(tmp_path)) == 42
+
+    def test_shape_mismatch_raises(self, small_lm, tmp_path):
+        cfg, params = small_lm
+        path = step_path(str(tmp_path), 1)
+        save(path, {"w": np.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            load(path, {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+
+
+class TestData:
+    def test_lm_batch_has_bigram_structure(self):
+        ds = SyntheticLMDataset(vocab_size=128, seq_len=64, seed=0)
+        b = ds.batch(16, np.random.RandomState(0))["tokens"]
+        follow = (ds._next[b[:, :-1]] == b[:, 1:]).mean()
+        assert follow > 0.5          # planted bigram signal present
+
+    def test_sharded_loader_prefetch(self):
+        ds = SyntheticLMDataset(vocab_size=64, seq_len=8, seed=0)
+        loader = ShardedLoader(ds.stream(4), mesh=None)
+        b1, b2 = next(loader), next(loader)
+        assert b1["tokens"].shape == (4, 8)
+        assert not np.array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+class TestBatcher:
+    def test_groups_and_padding(self):
+        coding = CodingConfig(k=4, s=1)
+        b = GroupBatcher(coding, groups_per_batch=2)
+        for i in range(5):
+            b.submit({"x": np.full((3,), i, np.float32)})
+        assert not b.ready()
+        plan = b.next_batch(flush=True)
+        assert plan is not None
+        assert plan.valid.sum() == 5
+        stacked = b.stack_payloads(plan)
+        assert stacked["x"].shape == (8, 3)
+        # padded slots repeat the last request
+        np.testing.assert_array_equal(stacked["x"][5], stacked["x"][4])
+
+
+class TestCodedServing:
+    """End-to-end coded LLM serving on a reduced model (DESIGN.md §5)."""
+
+    def _uncoded_reference(self, cfg, params, tokens, steps=2):
+        caches = init_caches(cfg, tokens.shape[0], max_len=64)
+        logits, caches = prefill(cfg, params, {"tokens": tokens}, caches)
+        outs = [logits]
+        pos = tokens.shape[1]
+        nxt = jnp.argmax(logits, -1)[:, None]
+        for i in range(steps - 1):
+            logits, caches = decode_step(cfg, params, caches,
+                                         {"tokens": nxt},
+                                         jnp.asarray(pos, jnp.int32))
+            outs.append(logits)
+            nxt = jnp.argmax(logits, -1)[:, None]
+            pos += 1
+        return outs
+
+    def test_coded_prefill_decode_agreement(self, small_lm):
+        cfg, params = small_lm
+        coding = CodingConfig(k=4, s=1)
+        tokens = jax.random.randint(jax.random.PRNGKey(7), (8, 12), 0,
+                                    cfg.vocab_size)
+        ref = self._uncoded_reference(cfg, params, tokens, steps=2)
+
+        logits, state = coded_prefill(cfg, coding, params,
+                                      {"tokens": tokens}, max_len=64)
+        assert logits.shape == (8, cfg.vocab_size)
+        agree = (np.argmax(np.asarray(logits), -1)
+                 == np.argmax(np.asarray(ref[0]), -1)).mean()
+        assert agree >= 0.5, f"prefill argmax agreement {agree}"
+
+        nxt = jnp.argmax(logits, -1)[:, None]
+        logits2, state = coded_decode_step(cfg, coding, params, state, nxt)
+        assert logits2.shape == (8, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits2)))
+
+    def test_coded_decode_with_straggler(self, small_lm):
+        cfg, params = small_lm
+        coding = CodingConfig(k=4, s=1)
+        tokens = jax.random.randint(jax.random.PRNGKey(8), (4, 10), 0,
+                                    cfg.vocab_size)
+        mask = sample_straggler_mask(coding, np.random.RandomState(0))
+        logits, state = coded_prefill(cfg, coding, params,
+                                      {"tokens": tokens}, max_len=32,
+                                      straggler_mask=mask)
+        assert np.all(np.isfinite(np.asarray(logits)))
+        nxt = jnp.argmax(logits, -1)[:, None]
+        logits2, _ = coded_decode_step(cfg, coding, params, state, nxt,
+                                       straggler_mask=mask)
+        assert np.all(np.isfinite(np.asarray(logits2)))
+
+    def test_coded_decode_byzantine_located(self, small_lm):
+        cfg, params = small_lm
+        coding = CodingConfig(k=4, s=0, e=1, c_vote=16)
+        tokens = jax.random.randint(jax.random.PRNGKey(9), (4, 10), 0,
+                                    cfg.vocab_size)
+        logits, state = coded_prefill(cfg, coding, params,
+                                      {"tokens": tokens}, max_len=32)
+        byz = sample_byzantine_mask(coding, np.random.RandomState(1))
+        nxt = jnp.argmax(logits, -1)[:, None]
+        corrupted, _ = coded_decode_step(
+            cfg, coding, params, state, nxt, byz_mask=byz,
+            byz_rng=jax.random.PRNGKey(2), byz_sigma=100.0)
+        clean, _ = coded_decode_step(cfg, coding, params, state, nxt)
+        agree = (np.argmax(np.asarray(corrupted), -1)
+                 == np.argmax(np.asarray(clean), -1)).mean()
+        assert np.all(np.isfinite(np.asarray(corrupted)))
+        assert agree >= 0.75, f"byzantine-corrected agreement {agree}"
+
+    def test_coded_serving_jits(self, small_lm):
+        cfg, params = small_lm
+        coding = CodingConfig(k=4, s=1)
+
+        @jax.jit
+        def pf(p, tokens):
+            return coded_prefill(cfg, coding, p, {"tokens": tokens},
+                                 max_len=32)
+
+        tokens = jax.random.randint(jax.random.PRNGKey(10), (4, 8), 0,
+                                    cfg.vocab_size)
+        logits, state = pf(params, tokens)
+        assert logits.shape == (4, cfg.vocab_size)

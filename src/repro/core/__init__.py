@@ -4,7 +4,9 @@ from repro.core.berrut import (CodingConfig, chebyshev_first_kind,
                                chebyshev_second_kind, decode, decode_matrix,
                                encode, encode_matrix)
 from repro.core.engine import (ApproxIFEREngine, coded_inference,
-                               decode_groups, encode_groups, group_queries)
+                               decode_coded_preds, decode_groups,
+                               encode_groups, group_queries,
+                               mask_from_completion_times)
 from repro.core.error_locator import (locate_errors,
                                       locate_errors_from_logits)
 from repro.core.replication import replicated_inference, replication_workers
@@ -14,6 +16,7 @@ __all__ = [
     "CodingConfig", "chebyshev_first_kind", "chebyshev_second_kind",
     "encode", "decode", "encode_matrix", "decode_matrix",
     "ApproxIFEREngine", "coded_inference", "encode_groups", "decode_groups",
-    "group_queries", "locate_errors", "locate_errors_from_logits",
+    "decode_coded_preds", "group_queries", "mask_from_completion_times",
+    "locate_errors", "locate_errors_from_logits",
     "replicated_inference", "replication_workers", "parm_inference",
 ]

@@ -9,10 +9,11 @@ i" is the device slice owning coded stream i.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import berrut
 from repro.core.berrut import CodingConfig
@@ -69,12 +70,65 @@ def apply_byzantine(coded_preds: jnp.ndarray, byz_mask: Optional[jnp.ndarray],
     return coded_preds + m * noise
 
 
+def decode_coded_preds(cfg: CodingConfig, preds: jnp.ndarray,
+                       avail: jnp.ndarray) -> jnp.ndarray:
+    """Decode grouped coded predictions under an availability mask.
+
+    (G, N+1, ...) coded predictions + (N+1,) mask -> (G*K, ...) outputs.
+    With E > 0 the error locator (Algorithm 2) runs per group first and
+    located Byzantine workers are excluded from the mask.  This is THE
+    decode path: both ``coded_inference`` and the event-driven scheduler
+    call it, so a scheduler-derived mask decodes bit-identically to a
+    hand-fed one.
+    """
+    if cfg.e > 0:
+        betas = jnp.asarray(cfg.betas, jnp.float32)
+
+        def locate(group_preds):
+            return locate_errors_from_logits(
+                cfg, betas, group_preds.astype(jnp.float32), avail)
+
+        located = jax.vmap(locate)(preds)             # (G, N+1) bool
+        per_group = avail * (1.0 - located.astype(preds.dtype))
+        decoded = jax.vmap(
+            lambda p, m: berrut.decode(cfg, p, m, axis=0))(preds, per_group)
+    else:
+        decoded = decode_groups(cfg, preds, avail)
+    return ungroup(decoded)
+
+
+def mask_from_completion_times(
+    cfg: CodingConfig, times: np.ndarray,
+    wait_for: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Derive the straggler mask from the event clock (DESIGN.md §8).
+
+    The serving runtime decodes the moment the fastest ``wait_for`` coded
+    workers have landed; every slower worker is a straggler *for this
+    batch*.  ``times`` is (..., N+1) per-worker completion times (any
+    clock unit).  Returns ``(mask, trigger)``: the (..., N+1) float32
+    availability mask with exactly ``wait_for`` ones per row (stable
+    argsort breaks ties deterministically) and the (...,) decode trigger
+    time — the moment the wait_for-th worker landed.
+    """
+    t = np.asarray(times, np.float64)
+    w = cfg.wait_for if wait_for is None else wait_for
+    if not 1 <= w <= t.shape[-1]:
+        raise ValueError(f"wait_for={w} out of range for {t.shape[-1]} "
+                         "workers")
+    order = np.argsort(t, axis=-1, kind="stable")
+    mask = np.zeros(t.shape, np.float32)
+    np.put_along_axis(mask, order[..., :w], 1.0, axis=-1)
+    trigger = np.take_along_axis(t, order[..., w - 1:w], axis=-1)[..., 0]
+    return mask, trigger
+
+
 def coded_inference(
     predict_fn: Callable[[jnp.ndarray], jnp.ndarray],
     cfg: CodingConfig,
     queries: jnp.ndarray,
     *,
     straggler_mask: Optional[jnp.ndarray] = None,
+    completion_times: Optional[np.ndarray] = None,
     byz_mask: Optional[jnp.ndarray] = None,
     byz_rng: Optional[jax.Array] = None,
     byz_sigma: float = 10.0,
@@ -85,6 +139,9 @@ def coded_inference(
       predict_fn: the hosted model f, batched over its leading axis.
       queries:    (B, ...) real queries, B divisible by cfg.k.
       straggler_mask: (N+1,) 1 = worker responded.  Default: all available.
+      completion_times: (N+1,) per-worker completion times; when given
+        (and no explicit mask), the mask is derived from the event clock
+        via ``mask_from_completion_times``.
       byz_mask:   (N+1,) 1 = worker is Byzantine (its result is corrupted).
       byz_rng / byz_sigma: corruption noise.
 
@@ -98,25 +155,13 @@ def coded_inference(
     preds = preds.reshape(coded.shape[0], cfg.num_workers, *preds.shape[1:])
     preds = apply_byzantine(preds, byz_mask, byz_rng, byz_sigma)
 
+    if straggler_mask is None and completion_times is not None:
+        derived, _ = mask_from_completion_times(cfg, completion_times)
+        straggler_mask = jnp.asarray(derived, preds.dtype)
     if straggler_mask is None:
         straggler_mask = jnp.ones((cfg.num_workers,), preds.dtype)
-    avail = straggler_mask
 
-    if cfg.e > 0:
-        betas = jnp.asarray(cfg.betas, jnp.float32)
-
-        def locate(group_preds):
-            return locate_errors_from_logits(
-                cfg, betas, group_preds.astype(jnp.float32), avail)
-
-        located = jax.vmap(locate)(preds)             # (G, N+1) bool
-        avail = avail * (1.0 - located.astype(preds.dtype))
-        decoded = jax.vmap(
-            lambda p, m: berrut.decode(cfg, p, m, axis=0))(preds, avail)
-    else:
-        decoded = decode_groups(cfg, preds, avail)
-
-    return ungroup(decoded)
+    return decode_coded_preds(cfg, preds, straggler_mask)
 
 
 class ApproxIFEREngine:

@@ -1,9 +1,13 @@
 """Coded serving driver: batched requests through the ApproxIFER protocol.
 
-Simulates the paper's prediction-serving system end to end on host devices:
-requests arrive at the batcher, groups of K are Berrut-encoded, the model
-serves N+1 coded streams, stragglers/Byzantine workers are injected per
-step, and decoded predictions stream back.
+Serves the paper's prediction-serving system end to end on host devices
+through the event-driven scheduler (DESIGN.md §8): requests arrive on a
+Poisson clock, the deadline-flushing batcher forms groups of K, groups
+are Berrut-encoded, and every autoregressive round is a coded dispatch
+whose straggler mask derives from per-worker completion times sampled
+from the latency model — the decode fires the moment the fastest
+``wait_for`` coded streams land.  With E > 0 a Byzantine worker corrupts
+its logits each round and is located + excluded by Algorithm 2.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --k 4 --s 1 --steps 8
@@ -15,64 +19,62 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.core.berrut import CodingConfig
 from repro.models import init_params
-from repro.serving import (GroupBatcher, coded_decode_step, coded_prefill,
-                           sample_byzantine_mask, sample_straggler_mask)
+from repro.serving import (CodedLLMExecutor, CodedScheduler, LatencyModel,
+                           SchedulerConfig, percentile_table)
 
 
 def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
-        prompt_len: int, steps: int, byz_sigma: float, seed: int = 0):
+        prompt_len: int, steps: int, byz_sigma: float, seed: int = 0,
+        rate_rps: float = 2000.0, flush_deadline_ms: float = 5.0,
+        groups_per_batch: int = 2, slo_ms: float | None = None):
     cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
     coding = CodingConfig(k=k, s=s, e=e)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(seed)
 
-    batcher = GroupBatcher(coding, groups_per_batch=max(requests // k, 1))
-    for _ in range(requests):
-        batcher.submit({"tokens": rng.randint(
-            0, cfg.vocab_size, (prompt_len,)).astype(np.int32)})
-    plan = batcher.next_batch(flush=True)
-    batch = batcher.stack_payloads(plan)
-    tokens = jnp.asarray(batch["tokens"])
-    max_len = prompt_len + steps + 1
-
-    print(f"serving {requests} requests as "
-          f"{tokens.shape[0] // coding.k} groups x {coding.num_workers} "
-          f"coded streams (overhead {coding.overhead:.2f}x, "
-          f"replication would need "
+    print(f"serving {requests} requests at {rate_rps:.0f} req/s as groups "
+          f"of K={k} x {coding.num_workers} coded streams "
+          f"(overhead {coding.overhead:.2f}x, replication would need "
           f"{(s + 1) * k if e == 0 else (2 * e + 1) * k} workers/group)")
 
-    prefill_fn = jax.jit(lambda p, t, m: coded_prefill(
-        cfg, coding, p, {"tokens": t}, max_len=max_len, straggler_mask=m))
-    decode_fn = jax.jit(lambda p, st, t, m, bm, br: coded_decode_step(
-        cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm, byz_rng=br,
-        byz_sigma=byz_sigma))
+    latency_model = LatencyModel()
+    executor = CodedLLMExecutor(cfg, coding, params, steps=steps,
+                                max_len=prompt_len + steps + 2,
+                                byz_rate=1.0 if e else 0.0,
+                                byz_sigma=byz_sigma, seed=seed)
+    sched = CodedScheduler(
+        SchedulerConfig(coding=coding, groups_per_batch=groups_per_batch,
+                        flush_deadline_ms=flush_deadline_ms, slo_ms=slo_ms,
+                        seed=seed),
+        latency_model, executor)
 
-    mask = sample_straggler_mask(coding, rng)
+    payloads = [rng.randint(0, cfg.vocab_size,
+                            (prompt_len,)).astype(np.int32)
+                for _ in range(requests)]
+
     t0 = time.time()
-    logits, state = prefill_fn(params, tokens, mask)
-    print(f"prefill done in {time.time() - t0:.2f}s "
-          f"(stragglers at {np.where(np.asarray(mask) == 0)[0].tolist()})")
+    # arrivals come from the scheduler's own Poisson stream, which is
+    # seeded independently of the worker-latency stream
+    metrics = sched.run(payloads, rate_rps=rate_rps)
+    wall = time.time() - t0
 
-    outs = []
-    key = jax.random.PRNGKey(seed)
-    for i in range(steps):
-        nxt = jnp.argmax(logits, -1)[:, None]
-        outs.append(np.asarray(nxt[:, 0]))
-        mask = sample_straggler_mask(coding, rng)
-        byz = sample_byzantine_mask(coding, rng) if e else None
-        key, sub = jax.random.split(key)
-        logits, state = decode_fn(params, state, nxt, mask, byz,
-                                  sub if e else None)
-    dt = time.time() - t0
-    toks = np.stack(outs, 1)
-    print(f"decoded {steps} steps x {requests} streams in {dt:.2f}s")
-    for r in range(min(4, requests)):
+    print(metrics.format_table())
+    per_round = np.asarray([w for b in sched.batches for w in b.round_waits])
+    print(f"per-round decode trigger: p50 {np.percentile(per_round, 50):.1f}"
+          f"ms  p99 {np.percentile(per_round, 99):.1f}ms "
+          f"({len(per_round)} coded rounds, wall {wall:.2f}s)")
+    none_p99 = percentile_table(latency_model, k, s,
+                                trials=4000)["none"]["p99_ms"]
+    print(f"uncoded wait-for-all worker p99 would be {none_p99:.1f}ms")
+
+    uids = sorted(sched.results)
+    toks = np.stack([sched.results[u] for u in uids])
+    for r in uids[:4]:
         print(f"  request {r}: {toks[r].tolist()}")
     return toks
 
@@ -89,9 +91,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--byz-sigma", type=float, default=50.0)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="Poisson arrival rate, requests/second")
+    ap.add_argument("--deadline-ms", type=float, default=5.0,
+                    help="batcher flush deadline")
+    ap.add_argument("--groups", type=int, default=2,
+                    help="query groups per dispatched batch")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="latency SLO for goodput accounting")
     args = ap.parse_args()
     run(args.arch, args.reduced, args.requests, args.k, args.s, args.e,
-        args.prompt_len, args.steps, args.byz_sigma)
+        args.prompt_len, args.steps, args.byz_sigma, rate_rps=args.rate,
+        flush_deadline_ms=args.deadline_ms, groups_per_batch=args.groups,
+        slo_ms=args.slo_ms)
 
 
 if __name__ == "__main__":

@@ -4,8 +4,18 @@ from repro.serving.failures import (sample_byzantine_mask,
                                     sample_straggler_mask,
                                     worst_case_straggler_mask)
 from repro.serving.batcher import GroupBatcher, Request, BatchPlan
+from repro.serving.latency import (LatencyModel, percentile_table,
+                                   simulate_approxifer)
+from repro.serving.metrics import (RequestRecord, ServingMetrics,
+                                   summarize_latencies)
+from repro.serving.scheduler import (CodedLLMExecutor, CodedScheduler,
+                                     EngineExecutor, SchedulerConfig,
+                                     poisson_arrivals)
 
 __all__ = ["CodedServingState", "coded_prefill", "coded_decode_step",
            "sample_straggler_mask", "sample_byzantine_mask",
            "worst_case_straggler_mask", "GroupBatcher", "Request",
-           "BatchPlan"]
+           "BatchPlan", "LatencyModel", "percentile_table",
+           "simulate_approxifer", "RequestRecord", "ServingMetrics",
+           "summarize_latencies", "CodedLLMExecutor", "CodedScheduler",
+           "EngineExecutor", "SchedulerConfig", "poisson_arrivals"]

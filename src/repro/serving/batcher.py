@@ -4,13 +4,20 @@ The prediction-serving front door (paper Fig. 4): requests arrive one at a
 time; the batcher fills groups of K, pads the tail group by repeating the
 last query (decode for padded slots is discarded), and hands fixed-shape
 batches to the jitted coded steps.
+
+Event-clock upgrade (DESIGN.md §8): every request carries its arrival
+time, and a ``flush_deadline_ms`` bounds how long the oldest pending
+request may wait before the scheduler force-flushes a partial batch.
+Deadline flushes pad only to a whole number of groups (``pad="group"``)
+so a near-empty queue does not ship a full-size batch of padding.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Iterator, List, Optional
+import math
+from typing import Any, List, Optional
 
 import numpy as np
 
@@ -21,6 +28,7 @@ from repro.core.berrut import CodingConfig
 class Request:
     uid: int
     payload: Any                     # modality inputs for one query
+    arrival_ms: float = 0.0          # event-clock submit time
 
 
 @dataclasses.dataclass
@@ -28,11 +36,17 @@ class BatchPlan:
     requests: List[Request]
     valid: np.ndarray                # (G*K,) bool — padded slots False
 
+    @property
+    def uids(self) -> List[int]:
+        return [r.uid for r in self.requests]
+
 
 class GroupBatcher:
-    def __init__(self, coding: CodingConfig, groups_per_batch: int = 1):
+    def __init__(self, coding: CodingConfig, groups_per_batch: int = 1,
+                 flush_deadline_ms: Optional[float] = None):
         self.coding = coding
         self.groups = groups_per_batch
+        self.flush_deadline_ms = flush_deadline_ms
         self._pending: List[Request] = []
         self._uid = itertools.count()
 
@@ -40,29 +54,65 @@ class GroupBatcher:
     def batch_size(self) -> int:
         return self.groups * self.coding.k
 
-    def submit(self, payload: Any) -> int:
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, payload: Any, now: float = 0.0) -> int:
         uid = next(self._uid)
-        self._pending.append(Request(uid, payload))
+        self._pending.append(Request(uid, payload, arrival_ms=now))
         return uid
 
     def ready(self) -> bool:
         return len(self._pending) >= self.batch_size
 
-    def next_batch(self, flush: bool = False) -> Optional[BatchPlan]:
-        """Pop a full batch; with ``flush`` pads a partial tail batch."""
+    def pending_uids(self) -> List[int]:
+        return [r.uid for r in self._pending]
+
+    def oldest_deadline(self) -> Optional[float]:
+        """Event time at which the oldest pending request must flush, or
+        None when the queue is empty / no deadline is configured."""
+        if not self._pending or self.flush_deadline_ms is None:
+            return None
+        return self._pending[0].arrival_ms + self.flush_deadline_ms
+
+    def deadline_expired(self, now: float) -> bool:
+        deadline = self.oldest_deadline()
+        return deadline is not None and now >= deadline
+
+    def next_batch(self, flush: bool = False,
+                   pad: str = "batch") -> Optional[BatchPlan]:
+        """Pop a full batch; with ``flush`` pads a partial tail batch.
+
+        ``pad="batch"`` (default) pads to the full ``groups_per_batch * K``
+        shape — the fixed shape the jitted serving steps want.
+        ``pad="group"`` pads a flushed partial batch only to the smallest
+        whole number of groups covering the pending requests — what the
+        deadline path wants under light load.
+        """
+        if pad not in ("batch", "group"):
+            raise ValueError(f"pad must be 'batch' or 'group', got {pad!r}")
         n = self.batch_size
         if len(self._pending) < n and not (flush and self._pending):
             return None
         take = self._pending[:n]
         self._pending = self._pending[n:]
+        if len(take) < n and pad == "group":
+            n = math.ceil(len(take) / self.coding.k) * self.coding.k
         valid = np.ones((n,), bool)
         while len(take) < n:               # pad by repeating the last
             valid[len(take)] = False
-            take.append(Request(-1, take[-1].payload))
+            take.append(Request(-1, take[-1].payload,
+                                arrival_ms=take[-1].arrival_ms))
         return BatchPlan(requests=take, valid=valid)
 
-    def stack_payloads(self, plan: BatchPlan) -> dict:
-        """Stack per-request modality dicts into batch arrays."""
-        keys = plan.requests[0].payload.keys()
-        return {k: np.stack([r.payload[k] for r in plan.requests])
-                for k in keys}
+    def stack_payloads(self, plan: BatchPlan):
+        """Stack per-request payloads into batch arrays.
+
+        Dict payloads (modality dicts) stack per key; bare array payloads
+        stack directly into one (B, ...) array.
+        """
+        first = plan.requests[0].payload
+        if isinstance(first, dict):
+            return {k: np.stack([r.payload[k] for r in plan.requests])
+                    for k in first.keys()}
+        return np.stack([r.payload for r in plan.requests])

@@ -23,6 +23,8 @@ from typing import Tuple
 import numpy as np
 
 from repro.core.berrut import CodingConfig
+from repro.core.engine import mask_from_completion_times
+from repro.serving.metrics import summarize_latencies
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,8 +70,7 @@ def simulate_approxifer(model: LatencyModel, coding: CodingConfig,
     rng = np.random.RandomState(seed)
     n = coding.num_workers
     lat = model.sample(rng, trials * n).reshape(trials, n)
-    kth = np.sort(lat, axis=1)[:, coding.wait_for - 1]
-    masks = (lat <= kth[:, None]).astype(np.float32)
+    masks, kth = mask_from_completion_times(coding, lat)
     return kth, masks
 
 
@@ -84,10 +85,5 @@ def percentile_table(model: LatencyModel, k: int, s: int, trials: int = 20000
             ("none", none, k),
             ("replication", rep, (s + 1) * k),
             ("approxifer", aif, coding.num_workers)):
-        out[name] = {
-            "workers": workers,
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
-            "p999_ms": float(np.percentile(lat, 99.9)),
-        }
+        out[name] = {"workers": workers, **summarize_latencies(lat)}
     return out

@@ -1,0 +1,134 @@
+"""Per-request serving metrics: latency percentiles and goodput.
+
+The offline simulator (`serving/latency.py`) reports batch completion
+times in a vacuum; the event-driven scheduler (DESIGN.md §8) measures the
+full request lifecycle instead — arrival, queueing in the batcher,
+dispatch, and decode — so the paper's tail-latency claim (§1, Fig. 4) is
+observed end to end, including batching delay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PERCENTILES = (("p50_ms", 50.0), ("p99_ms", 99.0), ("p999_ms", 99.9))
+
+
+def summarize_latencies(latencies_ms) -> Dict[str, float]:
+    """p50/p99/p99.9 over a latency sample (shared with the offline
+    percentile tables so the two report formats line up)."""
+    lat = np.asarray(latencies_ms, np.float64)
+    if lat.size == 0:
+        return {name: float("nan") for name, _ in PERCENTILES}
+    return {name: float(np.percentile(lat, q)) for name, q in PERCENTILES}
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """Lifecycle of one served request (all times on the event clock)."""
+
+    uid: int
+    arrival_ms: float
+    dispatch_ms: float
+    complete_ms: float            # when the response left the scheduler
+    speculative: bool = False     # served by the SLO early-decode path
+    corrected: bool = False       # a later full decode revised the output
+
+    @property
+    def latency_ms(self) -> float:
+        return self.complete_ms - self.arrival_ms
+
+    @property
+    def queue_ms(self) -> float:
+        return self.dispatch_ms - self.arrival_ms
+
+    @property
+    def service_ms(self) -> float:
+        return self.complete_ms - self.dispatch_ms
+
+
+class ServingMetrics:
+    """Accumulates request records and derives the serving scoreboard."""
+
+    def __init__(self, slo_ms: Optional[float] = None):
+        self.slo_ms = slo_ms
+        self.records: List[RequestRecord] = []
+        self.batches = 0
+        self.deadline_flushes = 0     # batches dispatched by deadline
+        self.speculative_decodes = 0  # batches early-decoded at the SLO
+        self.corrections = 0          # speculative outputs later revised
+
+    def record(self, rec: RequestRecord) -> None:
+        self.records.append(rec)
+
+    # -- derived views ---------------------------------------------------
+
+    @property
+    def count(self) -> int:
+        return len(self.records)
+
+    def latencies_ms(self) -> np.ndarray:
+        return np.asarray([r.latency_ms for r in self.records], np.float64)
+
+    def queue_ms(self) -> np.ndarray:
+        return np.asarray([r.queue_ms for r in self.records], np.float64)
+
+    def percentiles(self) -> Dict[str, float]:
+        return summarize_latencies(self.latencies_ms())
+
+    def makespan_ms(self) -> float:
+        if not self.records:
+            return 0.0
+        t0 = min(r.arrival_ms for r in self.records)
+        t1 = max(r.complete_ms for r in self.records)
+        return max(t1 - t0, 1e-9)
+
+    def throughput_rps(self) -> float:
+        """Completed requests per second of event time."""
+        return self.count / self.makespan_ms() * 1e3
+
+    def goodput_rps(self, slo_ms: Optional[float] = None) -> float:
+        """Requests served WITHIN the SLO per second of event time.
+
+        Without an SLO every completed request counts (== throughput).
+        """
+        slo = self.slo_ms if slo_ms is None else slo_ms
+        if slo is None:
+            return self.throughput_rps()
+        good = int(np.sum(self.latencies_ms() <= slo))
+        return good / self.makespan_ms() * 1e3
+
+    def summary(self) -> Dict[str, float]:
+        out = dict(self.percentiles())
+        out.update(
+            requests=float(self.count),
+            batches=float(self.batches),
+            deadline_flushes=float(self.deadline_flushes),
+            speculative_decodes=float(self.speculative_decodes),
+            corrections=float(self.corrections),
+            mean_queue_ms=(float(self.queue_ms().mean())
+                           if self.records else float("nan")),
+            throughput_rps=self.throughput_rps(),
+            goodput_rps=self.goodput_rps(),
+        )
+        return out
+
+    def format_table(self) -> str:
+        s = self.summary()
+        lines = [
+            f"requests {self.count}  batches {self.batches} "
+            f"(deadline-flushed {self.deadline_flushes})",
+            f"latency  p50 {s['p50_ms']:.2f}ms  p99 {s['p99_ms']:.2f}ms  "
+            f"p99.9 {s['p999_ms']:.2f}ms  (queue {s['mean_queue_ms']:.2f}ms "
+            "mean)",
+            f"goodput  {s['goodput_rps']:.1f} req/s"
+            + (f" at SLO {self.slo_ms:.1f}ms" if self.slo_ms else ""),
+        ]
+        if self.speculative_decodes:
+            lines.append(
+                f"speculative decodes {self.speculative_decodes}  "
+                f"corrections {self.corrections}")
+        return "\n".join(lines)

@@ -1,0 +1,388 @@
+"""Event-driven coded serving scheduler with adaptive wait-for decode.
+
+Closes the loop the offline pieces leave open (DESIGN.md §8): requests
+arrive on a Poisson/trace clock into the deadline-flushing
+``GroupBatcher``; each dispatched batch samples per-worker completion
+times from ``LatencyModel``; the decoder fires the moment the fastest
+``wait_for`` coded workers land, deriving the straggler mask from the
+event clock (``mask_from_completion_times``) instead of a hand-fed mask.
+An optional speculative path early-decodes at a latency SLO from whatever
+workers have landed, then corrects when the full quorum arrives.
+
+Two executors drive real compute behind the same event loop:
+
+  * ``EngineExecutor`` — the pure ``coded_inference`` path (encode ->
+    predict -> mask-decode), decoding bit-identically to calling
+    ``coded_inference`` with the scheduler-derived mask.
+  * ``CodedLLMExecutor`` — the jitted ``coded_prefill`` /
+    ``coded_decode_step`` path: every autoregressive round is a coded
+    dispatch whose straggler mask comes from fresh completion times.
+
+Simulated time is milliseconds on a discrete-event heap; model compute
+runs for real (jitted) when its event fires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.berrut import CodingConfig
+from repro.core.engine import (decode_coded_preds, encode_groups,
+                               group_queries, mask_from_completion_times)
+from repro.serving.batcher import BatchPlan, GroupBatcher
+from repro.serving.latency import LatencyModel
+from repro.serving.metrics import RequestRecord, ServingMetrics
+
+# Event kinds; the numeric order breaks timestamp ties: a batch-filling
+# arrival dispatches before a flush deadline at the same instant, and a
+# speculative decode precedes the full decode it anticipates.
+_ARRIVAL, _FLUSH, _SPEC, _ROUND = 0, 1, 2, 3
+
+
+def poisson_arrivals(n: int, rate_rps: float, seed: int = 0,
+                     start_ms: float = 0.0) -> np.ndarray:
+    """(n,) Poisson arrival times in ms for an open-loop ``rate_rps``."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be positive, got {rate_rps}")
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1e3 / rate_rps, size=n)
+    return start_ms + np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs of the serving runtime."""
+
+    coding: CodingConfig
+    groups_per_batch: int = 1
+    flush_deadline_ms: Optional[float] = 2.0   # None: only full batches
+    slo_ms: Optional[float] = None             # speculative decode trigger
+    seed: int = 0                              # worker-latency stream
+
+
+@dataclasses.dataclass
+class InflightBatch:
+    """One dispatched coded batch, tracked from dispatch to decode."""
+
+    bid: int
+    plan: BatchPlan
+    queries: Any                       # stacked payloads handed to executor
+    handle: Any = None                 # executor state
+    dispatch_ms: float = 0.0
+    round_masks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    round_waits: List[float] = dataclasses.field(default_factory=list)
+    worker_times: List[np.ndarray] = dataclasses.field(default_factory=list)
+    outputs: Any = None
+    complete_ms: float = 0.0
+    spec_ms: Optional[float] = None
+    spec_mask: Optional[np.ndarray] = None
+    spec_outputs: Any = None
+    deadline_flushed: bool = False
+
+    @property
+    def mask(self) -> np.ndarray:
+        """The decode mask (last round's mask for multi-round batches)."""
+        return self.round_masks[-1]
+
+    @property
+    def service_ms(self) -> float:
+        return self.complete_ms - self.dispatch_ms
+
+
+class EngineExecutor:
+    """Drives the pure coded-inference path behind the event loop.
+
+    ``dispatch`` runs encode + the hosted model over the coded streams
+    (the work the N+1 workers do); ``decode`` applies the event-derived
+    mask via ``decode_coded_preds`` — the same decode ``coded_inference``
+    uses, so outputs match it bit for bit.
+    """
+
+    rounds = 1
+    supports_speculation = True
+
+    def __init__(self, predict_fn, coding: CodingConfig):
+        self.predict_fn = predict_fn
+        self.coding = coding
+
+    def dispatch(self, queries) -> jnp.ndarray:
+        cfg = self.coding
+        q = jnp.asarray(queries)
+        coded = encode_groups(cfg, group_queries(q, cfg.k))
+        flat = coded.reshape(-1, *coded.shape[2:])
+        preds = self.predict_fn(flat)
+        return preds.reshape(coded.shape[0], cfg.num_workers,
+                             *preds.shape[1:])
+
+    def step(self, handle, round_idx: int, mask: np.ndarray):
+        raise RuntimeError("single-round executor has no step()")
+
+    def decode(self, handle, mask: np.ndarray) -> np.ndarray:
+        avail = jnp.asarray(mask, handle.dtype)
+        return np.asarray(decode_coded_preds(self.coding, handle, avail))
+
+
+class CodedLLMExecutor:
+    """Drives the jitted coded LLM serving steps behind the event loop.
+
+    A dispatched batch runs ``1 + steps`` coded rounds: round 0 is
+    ``coded_prefill``, each later round one ``coded_decode_step``.  Every
+    round's straggler mask is the event-derived one for that round.
+    Returns the greedy-decoded token matrix (B, steps + 1).
+
+    Note: partial (deadline-flushed) batches change the jitted batch
+    shape and recompile; size ``flush_deadline_ms``/load so full batches
+    dominate, or pad with ``pad="batch"``.
+    """
+
+    supports_speculation = False
+
+    def __init__(self, model_cfg, coding: CodingConfig, params, steps: int,
+                 max_len: int, byz_rate: float = 0.0,
+                 byz_sigma: float = 50.0, seed: int = 0):
+        from repro.serving.coded_serving import (coded_decode_step,
+                                                 coded_prefill)
+        self.coding = coding
+        self.params = params
+        self.rounds = 1 + steps
+        self.byz_rate = byz_rate
+        self.byz_sigma = byz_sigma
+        self._np_rng = np.random.RandomState(seed + 1)
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(lambda p, t, m: coded_prefill(
+            model_cfg, coding, p, {"tokens": t}, max_len=max_len,
+            straggler_mask=m))
+        self._decode = jax.jit(lambda p, st, t, m, bm, br: coded_decode_step(
+            model_cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm,
+            byz_rng=br, byz_sigma=byz_sigma))
+
+    def _byz(self):
+        """With probability ``byz_rate`` per round, corrupt E random
+        workers (the paper's §4.2 setup, per decode step)."""
+        if self.byz_rate <= 0 or self.coding.e == 0:
+            return None, None
+        if self._np_rng.rand() >= self.byz_rate:
+            return None, None
+        idx = self._np_rng.choice(self.coding.num_workers,
+                                  size=self.coding.e, replace=False)
+        byz = np.zeros((self.coding.num_workers,), np.float32)
+        byz[idx] = 1.0
+        self._key, sub = jax.random.split(self._key)
+        return jnp.asarray(byz), sub
+
+    def dispatch(self, queries) -> dict:
+        return {"tokens": jnp.asarray(queries, jnp.int32),
+                "state": None, "logits": None, "outs": []}
+
+    def _round(self, handle, round_idx: int, mask: np.ndarray) -> dict:
+        m = jnp.asarray(mask, jnp.float32)
+        if round_idx == 0:
+            logits, state = self._prefill(self.params, handle["tokens"], m)
+        else:
+            nxt = jnp.argmax(handle["logits"], -1)[:, None]
+            byz, key = self._byz()
+            logits, state = self._decode(self.params, handle["state"], nxt,
+                                         m, byz, key)
+        handle["logits"], handle["state"] = logits, state
+        handle["outs"].append(np.asarray(jnp.argmax(logits, -1)))
+        return handle
+
+    def step(self, handle, round_idx: int, mask: np.ndarray) -> dict:
+        return self._round(handle, round_idx, mask)
+
+    def decode(self, handle, mask: np.ndarray) -> np.ndarray:
+        handle = self._round(handle, self.rounds - 1, mask)
+        return np.stack(handle["outs"], axis=1)      # (B, rounds)
+
+
+class CodedScheduler:
+    """Discrete-event loop tying arrival, batching, dispatch, and decode.
+
+    ``run`` consumes per-request payloads plus arrival times and returns
+    ``ServingMetrics``; per-request outputs land in ``results`` (keyed by
+    uid), the provisional SLO-path responses in ``spec_results`` (only
+    for speculatively served requests, before their correction), and
+    per-batch masks/handles in ``batches`` for verification against a
+    direct ``coded_inference`` call.
+    """
+
+    def __init__(self, config: SchedulerConfig, latency_model: LatencyModel,
+                 executor):
+        self.config = config
+        self.latency_model = latency_model
+        self.executor = executor
+        self.batcher = GroupBatcher(
+            config.coding, groups_per_batch=config.groups_per_batch,
+            flush_deadline_ms=config.flush_deadline_ms)
+        self.metrics = ServingMetrics(slo_ms=config.slo_ms)
+        self.batches: List[InflightBatch] = []
+        self.results: Dict[int, np.ndarray] = {}
+        self.spec_results: Dict[int, np.ndarray] = {}
+        # worker latencies and (fallback) arrivals must be INDEPENDENT
+        # streams: derive distinct sub-seeds instead of reusing
+        # config.seed for both, which would correlate arrival gaps with
+        # worker latencies draw for draw
+        root = np.random.RandomState(config.seed)
+        self._rng = np.random.RandomState(root.randint(0, 2 ** 31 - 1))
+        self._arrival_seed = int(root.randint(0, 2 ** 31 - 1))
+        self._events: list = []
+        self._seq = itertools.count()
+        self._arrival_ms: Dict[int, float] = {}
+        self._bid = itertools.count()
+        self._now = 0.0
+
+    # -- event plumbing --------------------------------------------------
+
+    def _push(self, t: float, kind: int, data: Any) -> None:
+        heapq.heappush(self._events, (t, kind, next(self._seq), data))
+
+    def run(self, payloads: Sequence[Any],
+            arrival_ms: Optional[Sequence[float]] = None,
+            rate_rps: Optional[float] = None) -> ServingMetrics:
+        if arrival_ms is None:
+            if rate_rps is None:
+                raise ValueError("need arrival_ms or rate_rps")
+            arrival_ms = poisson_arrivals(len(payloads), rate_rps,
+                                          seed=self._arrival_seed)
+        if len(arrival_ms) != len(payloads):
+            raise ValueError("arrival_ms/payloads length mismatch")
+        for t, payload in zip(arrival_ms, payloads):
+            self._push(float(t), _ARRIVAL, payload)
+        while self._events or len(self.batcher):
+            if not self._events:
+                # arrivals exhausted with no flush deadline configured:
+                # drain the queue at the current clock
+                self._dispatch(self._now, flushed=False, pad="group",
+                               force=True)
+                continue
+            t, kind, _, data = heapq.heappop(self._events)
+            self._now = max(self._now, t)
+            if kind == _ARRIVAL:
+                self._on_arrival(t, data)
+            elif kind == _FLUSH:
+                self._on_flush(t, data)
+            elif kind == _SPEC:
+                self._on_spec(t, data)
+            elif kind == _ROUND:
+                self._on_round(t, *data)
+        return self.metrics
+
+    # -- handlers --------------------------------------------------------
+
+    def _on_arrival(self, t: float, payload: Any) -> None:
+        uid = self.batcher.submit(payload, now=t)
+        self._arrival_ms[uid] = t
+        while self.batcher.ready():
+            self._dispatch(t, flushed=False)
+        if self.batcher.flush_deadline_ms is not None and uid in \
+                self.batcher.pending_uids():
+            self._push(t + self.batcher.flush_deadline_ms, _FLUSH, uid)
+
+    def _on_flush(self, t: float, uid: int) -> None:
+        # the event was scheduled for ``uid``'s deadline; if uid already
+        # dispatched, the oldest pending request (if any) arrived later
+        # and its own flush event is still queued
+        if self.batcher.deadline_expired(t):
+            self._dispatch(t, flushed=True, pad="group")
+
+    def _dispatch(self, now: float, flushed: bool, pad: str = "batch",
+                  force: bool = False) -> None:
+        plan = self.batcher.next_batch(flush=flushed or force, pad=pad)
+        if plan is None:
+            return
+        batch = InflightBatch(bid=next(self._bid), plan=plan,
+                              queries=self.batcher.stack_payloads(plan),
+                              dispatch_ms=now, deadline_flushed=flushed)
+        batch.handle = self.executor.dispatch(batch.queries)
+        self.batches.append(batch)
+        self.metrics.batches += 1
+        if flushed:
+            self.metrics.deadline_flushes += 1
+        self._start_round(batch, now, 0)
+
+    def _start_round(self, batch: InflightBatch, now: float,
+                     round_idx: int) -> None:
+        """Sample this round's worker completion times and schedule the
+        adaptive wait-for decode trigger."""
+        coding = self.config.coding
+        times = self.latency_model.sample(self._rng, coding.num_workers)
+        mask, wait = mask_from_completion_times(coding, times)
+        batch.worker_times.append(times)
+        batch.round_masks.append(mask)
+        batch.round_waits.append(float(wait))
+        self._push(now + float(wait), _ROUND, (batch, round_idx))
+        last = round_idx == getattr(self.executor, "rounds", 1) - 1
+        slo = self.config.slo_ms
+        if (last and slo is not None
+                and getattr(self.executor, "supports_speculation", False)):
+            # the SLO is end-to-end (arrival -> response): speculate so the
+            # OLDEST request in the batch still answers by its deadline
+            oldest = min(r.arrival_ms for i, r in
+                         enumerate(batch.plan.requests) if batch.plan.valid[i])
+            target = oldest + slo
+            cutoff = target - now          # worker time available pre-SLO
+            if now + float(wait) > target and cutoff > 0:
+                landed = (times <= cutoff).astype(np.float32)
+                if landed.sum() >= 1:
+                    self._push(target, _SPEC, (batch, landed))
+
+    def _on_spec(self, t: float, data) -> None:
+        """SLO hit before the quorum: early-decode from whoever landed."""
+        batch, landed = data
+        batch.spec_ms = t
+        batch.spec_mask = landed
+        batch.spec_outputs = self.executor.decode(batch.handle, landed)
+        self.metrics.speculative_decodes += 1
+        for slot, req in enumerate(batch.plan.requests):
+            if batch.plan.valid[slot]:
+                self.spec_results[req.uid] = batch.spec_outputs[slot]
+
+    def _on_round(self, t: float, batch: InflightBatch,
+                  round_idx: int) -> None:
+        rounds = getattr(self.executor, "rounds", 1)
+        mask = batch.round_masks[round_idx]
+        if round_idx < rounds - 1:
+            batch.handle = self.executor.step(batch.handle, round_idx, mask)
+            self._start_round(batch, t, round_idx + 1)
+            return
+        batch.outputs = self.executor.decode(batch.handle, mask)
+        batch.complete_ms = t
+        corrected = self._corrections(batch)
+        for slot, req in enumerate(batch.plan.requests):
+            if not batch.plan.valid[slot]:
+                continue
+            self.results[req.uid] = batch.outputs[slot]
+            spec = batch.spec_ms is not None
+            self.metrics.record(RequestRecord(
+                uid=req.uid,
+                arrival_ms=self._arrival_ms[req.uid],
+                dispatch_ms=batch.dispatch_ms,
+                # a speculative serve answered the client at the SLO; the
+                # full decode is the trailing correction
+                complete_ms=batch.spec_ms if spec else t,
+                speculative=spec,
+                corrected=bool(corrected[slot]) if spec else False))
+
+    def _corrections(self, batch: InflightBatch) -> np.ndarray:
+        """Per-slot flag: did the full decode revise the speculative
+        response?  (argmax flip for logit-like outputs, any element
+        change otherwise)."""
+        n = len(batch.plan.requests)
+        if batch.spec_outputs is None:
+            return np.zeros((n,), bool)
+        spec, full = np.asarray(batch.spec_outputs), np.asarray(batch.outputs)
+        if spec.ndim >= 2:
+            changed = (np.argmax(spec, -1) != np.argmax(full, -1))
+            changed = changed.reshape(n, -1).any(axis=1)
+        else:
+            changed = spec != full
+        self.metrics.corrections += int(
+            np.sum(changed & batch.plan.valid[:n]))
+        return changed

@@ -1,0 +1,79 @@
+"""Fallback shim for ``hypothesis`` so the suite collects without it.
+
+The tier-1 suite mixes plain unit tests with hypothesis property tests in
+the same modules.  When ``hypothesis`` is not installed (it is a dev-only
+dependency, see requirements-dev.txt), importing it at module scope used
+to kill collection of the whole module — losing every unit test with it.
+
+Test modules instead do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+With the shim, ``@given`` replaces the property test with a stub that
+calls ``pytest.skip`` at runtime, so only the property tests skip and the
+plain unit tests keep running.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+class _AnyStrategy:
+    """Stands in for any hypothesis strategy object.
+
+    Strategy expressions are built at import time (``st.integers(0, 5)``,
+    ``.map(...)``, ``a | b``); they are never *drawn from* because the
+    decorated test body is replaced with a skip stub.
+    """
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+    def __or__(self, other):
+        return self
+
+
+class _StrategiesNamespace:
+    """``strategies as st`` replacement: every attribute is a strategy
+    factory returning an inert strategy object."""
+
+    def __getattr__(self, name):
+        return _AnyStrategy()
+
+
+st = _StrategiesNamespace()
+
+
+def given(*_args, **_kwargs):
+    """Replace the property test with a runtime-skip stub.
+
+    The stub takes ``*args`` so pytest's fixture resolution does not
+    mistake the hypothesis-provided parameters for fixtures.
+    """
+
+    def decorate(fn):
+        def _skipped_property_test(*args, **kwargs):
+            pytest.skip("hypothesis not installed; property test skipped")
+
+        _skipped_property_test.__name__ = getattr(fn, "__name__",
+                                                  "property_test")
+        _skipped_property_test.__doc__ = getattr(fn, "__doc__", None)
+        return _skipped_property_test
+
+    return decorate
+
+
+def settings(*_args, **_kwargs):
+    """``@settings(...)`` is a no-op without hypothesis."""
+
+    def decorate(fn):
+        return fn
+
+    return decorate

@@ -1,0 +1,125 @@
+"""Tests for the deadline-flushing GroupBatcher."""
+
+import numpy as np
+import pytest
+
+from repro.core.berrut import CodingConfig
+from repro.serving.batcher import GroupBatcher
+
+
+def _batcher(k=4, s=1, groups=2, deadline=None):
+    return GroupBatcher(CodingConfig(k=k, s=s), groups_per_batch=groups,
+                        flush_deadline_ms=deadline)
+
+
+class TestPadding:
+    def test_tail_flush_marks_exactly_padded_slots_invalid(self):
+        b = _batcher(k=4, groups=2)
+        for i in range(5):
+            b.submit({"x": np.full((3,), i, np.float32)})
+        plan = b.next_batch(flush=True)
+        assert plan.valid.sum() == 5
+        np.testing.assert_array_equal(plan.valid,
+                                      [True] * 5 + [False] * 3)
+        # padded slots repeat the last real request, uid -1
+        for req in plan.requests[5:]:
+            assert req.uid == -1
+            np.testing.assert_array_equal(req.payload["x"],
+                                          plan.requests[4].payload["x"])
+
+    def test_group_padding_stops_at_whole_groups(self):
+        b = _batcher(k=4, groups=4)
+        for i in range(5):
+            b.submit({"x": np.zeros(2, np.float32)})
+        plan = b.next_batch(flush=True, pad="group")
+        assert len(plan.requests) == 8          # ceil(5/4) groups, not 16
+        assert plan.valid.sum() == 5
+
+    def test_bad_pad_mode_rejected(self):
+        b = _batcher()
+        b.submit({"x": np.zeros(1, np.float32)})
+        with pytest.raises(ValueError):
+            b.next_batch(flush=True, pad="quux")
+
+    def test_no_flush_no_partial_batch(self):
+        b = _batcher(k=4, groups=1)
+        for _ in range(3):
+            b.submit({"x": np.zeros(1, np.float32)})
+        assert b.next_batch() is None
+        assert len(b) == 3
+
+
+class TestUids:
+    def test_uid_stability_across_batches(self):
+        b = _batcher(k=4, groups=1)
+        uids = [b.submit({"x": np.zeros(1, np.float32)}) for _ in range(10)]
+        assert uids == list(range(10))
+        p1 = b.next_batch()
+        p2 = b.next_batch()
+        assert p1.uids == [0, 1, 2, 3]
+        assert p2.uids == [4, 5, 6, 7]
+        # uids keep counting after pops
+        assert b.submit({"x": np.zeros(1, np.float32)}) == 10
+        assert b.pending_uids() == [8, 9, 10]
+
+    def test_plan_uids_property_includes_padding(self):
+        b = _batcher(k=2, groups=1)
+        b.submit({"x": np.zeros(1, np.float32)})
+        plan = b.next_batch(flush=True)
+        assert plan.uids == [0, -1]
+
+
+class TestStackPayloads:
+    def test_dict_payload_shape_dtype_roundtrip(self):
+        b = _batcher(k=2, groups=2)
+        for i in range(4):
+            b.submit({"tokens": np.full((7,), i, np.int32),
+                      "emb": np.full((3, 5), i, np.float16)})
+        stacked = b.stack_payloads(b.next_batch())
+        assert stacked["tokens"].shape == (4, 7)
+        assert stacked["tokens"].dtype == np.int32
+        assert stacked["emb"].shape == (4, 3, 5)
+        assert stacked["emb"].dtype == np.float16
+        np.testing.assert_array_equal(stacked["tokens"][2],
+                                      np.full((7,), 2, np.int32))
+
+    def test_bare_array_payload_stacks(self):
+        b = _batcher(k=2, groups=1)
+        for i in range(2):
+            b.submit(np.full((6,), i, np.float32))
+        stacked = b.stack_payloads(b.next_batch())
+        assert stacked.shape == (2, 6)
+        assert stacked.dtype == np.float32
+
+
+class TestDeadlineFlush:
+    def test_deadline_tracks_oldest_pending(self):
+        b = _batcher(k=4, groups=1, deadline=2.0)
+        assert b.oldest_deadline() is None
+        b.submit({"x": np.zeros(1, np.float32)}, now=10.0)
+        b.submit({"x": np.zeros(1, np.float32)}, now=11.0)
+        assert b.oldest_deadline() == 12.0
+        assert not b.deadline_expired(11.9)
+        assert b.deadline_expired(12.0)
+
+    def test_deadline_advances_after_pop(self):
+        b = _batcher(k=2, groups=1, deadline=2.0)
+        for t in (0.0, 0.5, 3.0):
+            b.submit({"x": np.zeros(1, np.float32)}, now=t)
+        assert b.oldest_deadline() == 2.0
+        b.next_batch()                       # pops the two oldest
+        assert b.oldest_deadline() == 5.0
+
+    def test_no_deadline_configured(self):
+        b = _batcher(deadline=None)
+        b.submit({"x": np.zeros(1, np.float32)}, now=1.0)
+        assert b.oldest_deadline() is None
+        assert not b.deadline_expired(1e9)
+
+    def test_arrival_time_recorded_on_requests(self):
+        b = _batcher(k=2, groups=1, deadline=1.0)
+        b.submit({"x": np.zeros(1, np.float32)}, now=4.25)
+        plan = b.next_batch(flush=True)
+        assert plan.requests[0].arrival_ms == 4.25
+        # padding inherits the repeated request's arrival time
+        assert plan.requests[1].arrival_ms == 4.25

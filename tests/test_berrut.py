@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep: property tests skip without it
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import berrut
 from repro.core.berrut import CodingConfig
@@ -206,3 +209,59 @@ class TestSystematicCoding:
         mask = jnp.ones(cfg.num_workers).at[jnp.asarray(parity)].set(0.0)
         out = np.asarray(berrut.decode(cfg, preds, mask, axis=0))
         np.testing.assert_allclose(out, ref, atol=1e-6)
+
+
+class TestSurvivorWeights:
+    """The no-pole deviation documented in berrut.survivor_weights:
+    weights must alternate over the SURVIVOR set, not the original
+    indices."""
+
+    @pytest.mark.parametrize("n_nodes", [3, 5, 6, 9, 13])
+    def test_signs_alternate_for_every_single_failure(self, n_nodes):
+        for failed in range(n_nodes):
+            mask = np.ones((n_nodes,), np.float32)
+            mask[failed] = 0.0
+            w = np.asarray(berrut.survivor_weights(jnp.asarray(mask)))
+            # failed node carries no weight
+            assert w[failed] == 0.0
+            survivors = w[np.arange(n_nodes) != failed]
+            np.testing.assert_allclose(np.abs(survivors), 1.0)
+            # strict alternation in survivor order, starting at +1
+            expect = (-1.0) ** np.arange(n_nodes - 1)
+            np.testing.assert_allclose(survivors, expect)
+
+    def test_no_failures_matches_paper_weights(self):
+        w = np.asarray(berrut.survivor_weights(jnp.ones(8, jnp.float32)))
+        np.testing.assert_allclose(w, (-1.0) ** np.arange(8))
+
+    def test_adjacent_survivors_never_share_sign(self):
+        """Multi-failure masks: consecutive surviving nodes always get
+        opposite signs (Berrut's no-pole hypothesis)."""
+        rng = np.random.RandomState(0)
+        for _ in range(50):
+            n = rng.randint(4, 14)
+            mask = np.ones((n,), np.float32)
+            drop = rng.choice(n, size=rng.randint(1, n - 1), replace=False)
+            mask[drop] = 0.0
+            w = np.asarray(berrut.survivor_weights(jnp.asarray(mask)))
+            signs = w[mask == 1.0]
+            assert (signs[1:] * signs[:-1] == -1.0).all()
+
+
+class TestSystematicExactDecode:
+    """Systematic mode through the full engine path: with zero stragglers
+    the decode must be exact to ~1e-5 for ANY model f."""
+
+    @pytest.mark.parametrize("k,s", [(4, 1), (8, 2)])
+    def test_engine_decode_exact_without_stragglers(self, k, s):
+        from repro.core import coded_inference
+        cfg = CodingConfig(k=k, s=s, systematic=True)
+        rng = np.random.RandomState(3)
+        x = jnp.asarray(rng.randn(2 * k, 6), jnp.float32)
+
+        def f(q):
+            return jnp.sin(q) * 2.0 + q ** 3 * 0.05
+
+        out = coded_inference(f, cfg, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(f(x)),
+                                   atol=1e-5)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep: property tests skip without it
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import berrut
 from repro.core.berrut import CodingConfig

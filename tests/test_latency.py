@@ -1,0 +1,89 @@
+"""Tests for the tail-latency simulator (`serving/latency.py`)."""
+
+import numpy as np
+import pytest
+
+from repro.core.berrut import CodingConfig
+from repro.core.engine import mask_from_completion_times
+from repro.serving.latency import (LatencyModel, percentile_table,
+                                   simulate_approxifer,
+                                   simulate_no_redundancy,
+                                   simulate_replication)
+
+
+class TestMasks:
+    @pytest.mark.parametrize("k,s", [(4, 1), (8, 1), (8, 3), (12, 2)])
+    def test_masks_contain_exactly_wait_for_ones(self, k, s):
+        coding = CodingConfig(k=k, s=s)
+        _, masks = simulate_approxifer(LatencyModel(), coding, trials=500)
+        assert masks.shape == (500, coding.num_workers)
+        np.testing.assert_array_equal(masks.sum(axis=1),
+                                      np.full(500, coding.wait_for))
+
+    def test_masks_select_fastest_workers(self):
+        coding = CodingConfig(k=4, s=2)
+        rng = np.random.RandomState(0)
+        times = LatencyModel().sample(rng, 50 * coding.num_workers)
+        times = times.reshape(50, coding.num_workers)
+        masks, triggers = mask_from_completion_times(coding, times)
+        for i in range(50):
+            fastest = np.argsort(times[i], kind="stable")[:coding.wait_for]
+            np.testing.assert_array_equal(np.flatnonzero(masks[i]),
+                                          np.sort(fastest))
+            assert triggers[i] == times[i, fastest].max()
+
+    def test_mask_ties_still_exact(self):
+        """Ties in completion times must not over-select workers."""
+        coding = CodingConfig(k=2, s=2)     # 4 workers, wait_for=2
+        times = np.asarray([5.0, 5.0, 5.0, 5.0])
+        mask, trigger = mask_from_completion_times(coding, times)
+        assert mask.sum() == 2
+        assert trigger == 5.0
+
+    def test_mask_wait_for_out_of_range(self):
+        coding = CodingConfig(k=2, s=1)
+        with pytest.raises(ValueError):
+            mask_from_completion_times(coding, np.ones(3), wait_for=4)
+
+
+class TestLatencyDominance:
+    def test_approxifer_leq_no_redundancy_per_trial(self):
+        """On the SAME worker draw, waiting for the fastest K of K+S
+        coded workers never exceeds waiting for ALL of any K workers:
+        the K-th order statistic of a superset is <= the max of a
+        K-subset.  Checked per trial, not just in aggregate."""
+        k, s, trials = 8, 2, 2000
+        coding = CodingConfig(k=k, s=s)
+        rng = np.random.RandomState(0)
+        lat = LatencyModel().sample(rng, trials * coding.num_workers)
+        lat = lat.reshape(trials, coding.num_workers)
+        _, aif = mask_from_completion_times(coding, lat)
+        aif_latency = np.sort(lat, axis=1)[:, coding.wait_for - 1]
+        none_latency = lat[:, :k].max(axis=1)
+        assert (aif_latency <= none_latency).all()
+
+    def test_simulators_return_per_trial_latencies(self):
+        model = LatencyModel()
+        assert simulate_no_redundancy(model, 8, 100).shape == (100,)
+        assert simulate_replication(model, 8, 1, 100).shape == (100,)
+        lat, masks = simulate_approxifer(model, CodingConfig(k=8, s=1), 100)
+        assert lat.shape == (100,)
+        assert (lat > 0).all()
+
+
+class TestPercentileTable:
+    @pytest.fixture(scope="class")
+    def table(self):
+        return percentile_table(LatencyModel(), k=8, s=1, trials=4000)
+
+    def test_monotone_in_percentile(self, table):
+        for name, row in table.items():
+            assert row["p50_ms"] <= row["p99_ms"] <= row["p999_ms"], name
+
+    def test_worker_counts(self, table):
+        assert table["none"]["workers"] == 8
+        assert table["replication"]["workers"] == 16
+        assert table["approxifer"]["workers"] == 9
+
+    def test_approxifer_beats_none_at_tail(self, table):
+        assert table["approxifer"]["p99_ms"] < table["none"]["p99_ms"]

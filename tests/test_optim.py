@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep: property tests skip without it
+    from _hypothesis_fallback import given, settings, st
 
 from repro.optim import (OptimizerConfig, adamw_update, global_norm,
                          init_opt_state)

@@ -23,10 +23,25 @@ from repro.models.classifier import (ClassifierConfig, accuracy,
                                      train_classifier, train_parity_model)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
-CACHE = os.path.join(RESULTS_DIR, "trained_models")
+
+# Tiny-shapes smoke mode (CI bench-smoke job): every benchmark entrypoint
+# runs end to end with shrunken datasets/training/sweeps, guarding against
+# import/API drift without paying the full measurement cost.  Trained
+# models are cached in a separate directory so smoke never poisons the
+# real cache.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+CACHE = os.path.join(RESULTS_DIR,
+                     "trained_models_smoke" if SMOKE else "trained_models")
+
+
+def scaled(full, smoke):
+    """Pick a sweep/trial size: ``full`` normally, ``smoke`` under
+    REPRO_BENCH_SMOKE=1."""
+    return smoke if SMOKE else full
+
 
 CLS_CFG = ClassifierConfig(dim=64, hidden=256, depth=2, num_classes=10)
-N_TRAIN, N_TEST = 20_000, 4_000
+N_TRAIN, N_TEST = scaled(20_000, 2_000), scaled(4_000, 400)
 
 
 @functools.lru_cache(maxsize=1)
@@ -48,7 +63,8 @@ def base_model():
         params = load(path, template)
         params = jax.tree.map(jnp.asarray, params)
     else:
-        params, _ = train_classifier(CLS_CFG, xtr, ytr, steps=500)
+        params, _ = train_classifier(CLS_CFG, xtr, ytr,
+                                     steps=scaled(500, 60))
         save(path, params)
     return params
 
@@ -64,7 +80,7 @@ def parity_model(k: int):
         params = load(path, template)
         return jax.tree.map(jnp.asarray, params)
     params, _ = train_parity_model(CLS_CFG, base_model(), xtr, k,
-                                   steps=800)
+                                   steps=scaled(800, 60))
     save(path, params)
     return params
 

@@ -10,13 +10,12 @@ coded-vs-uncoded argmax agreement (top-1 fidelity) with one straggler.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
 from repro import configs
 from repro.core.berrut import CodingConfig
-from repro.models import forward, init_params, predict_fn
+from repro.models import init_params, predict_fn
 from repro.core import coded_inference
 from repro.serving.failures import sample_straggler_mask
 
@@ -30,7 +29,8 @@ def run(emit=common.emit):
     coding = CodingConfig(k=K, s=S)
     rng = np.random.RandomState(4)
     out = {}
-    for arch in ARCHS:
+    archs = ARCHS if not common.SMOKE else ARCHS[:2]
+    for arch in archs:
         cfg = configs.get_reduced(arch)
         params = init_params(cfg, jax.random.PRNGKey(0))
         f = predict_fn(cfg, params)

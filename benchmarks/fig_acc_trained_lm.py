@@ -34,7 +34,8 @@ def _cfg() -> ModelConfig:
         qk_norm=True, tie_embeddings=True)
 
 
-def trained_lm(steps: int = 80):
+def trained_lm(steps: int | None = None):
+    steps = common.scaled(80, 10) if steps is None else steps
     cfg = _cfg()
     params = init_params(cfg, jax.random.PRNGKey(0))
     os.makedirs(common.CACHE, exist_ok=True)

@@ -5,6 +5,13 @@ The paper votes over all C=10 classes; LLM heads have up to 257k.  This
 sweep measures locator success rate vs the number of voting coordinates —
 validating that a strided <=64-coordinate subset suffices (the adaptation
 the serving path uses for vocab-sized logits).
+
+Second sweep (the online Byzantine pipeline, DESIGN.md §8): the batched,
+vote-GATED ``locate_groups`` path the scheduler decodes through, scored
+on (a) gated detection of independent vs COLLUDING corruption (colluding
+workers tell the same lie — the hard case for a rational locator) and
+(b) the false-positive rate on clean rounds, which the plain top-E
+locator cannot measure because it always flags E workers.
 """
 
 from __future__ import annotations
@@ -14,9 +21,10 @@ import numpy as np
 
 from benchmarks import common
 from repro.core.berrut import CodingConfig
-from repro.core.error_locator import chebyshev_design, locate_errors
+from repro.core.error_locator import (chebyshev_design, locate_errors,
+                                      locate_groups)
 
-K, E, TRIALS, SIGMA = 8, 2, 40, 10.0
+K, E, SIGMA = 8, 2, 10.0
 
 
 def _rational_values(cfg, rng, n_coords):
@@ -33,12 +41,13 @@ def _rational_values(cfg, rng, n_coords):
 
 
 def run(emit=common.emit):
+    trials = common.scaled(40, 8)
     cfg = CodingConfig(k=K, s=0, e=E)
     out = {}
     for c_vote in (1, 2, 4, 8, 16, 64):
         rng = np.random.RandomState(0)
         hits = 0
-        for t in range(TRIALS):
+        for t in range(trials):
             betas, vals = _rational_values(cfg, rng, c_vote)
             bad = 2 + rng.choice(cfg.num_workers - 4, size=E,
                                  replace=False)
@@ -47,10 +56,47 @@ def run(emit=common.emit):
                                 jnp.asarray(vals),
                                 jnp.ones(cfg.num_workers), k=K, e=E)
             hits += set(np.where(np.asarray(adv))[0]) == set(bad)
-        rate = hits / TRIALS
+        rate = hits / trials
         out[c_vote] = rate
         emit(f"fig_cvote_ablation/c{c_vote}", 0.0,
              f"locate_success={rate:.3f}")
+
+    # -- gated batched locate (the scheduler's decode path) --------------
+    groups, c_vote = 2, 16
+    betas_j = jnp.asarray(np.asarray(cfg.betas), jnp.float32)
+    avail = jnp.ones(cfg.num_workers)
+    for scenario in ("independent", "colluding", "clean"):
+        rng = np.random.RandomState(1)
+        hits = false_pos = 0
+        for t in range(trials):
+            grouped = []
+            bad = 2 + rng.choice(cfg.num_workers - 4, size=E, replace=False)
+            lie = SIGMA * rng.randn(1, c_vote).astype(np.float32)
+            for _ in range(groups):
+                _, vals = _rational_values(cfg, rng, c_vote)
+                if scenario == "colluding":
+                    vals[bad] += lie            # same lie, all colluders
+                elif scenario == "independent":
+                    vals[bad] += SIGMA * rng.randn(
+                        E, c_vote).astype(np.float32)
+                grouped.append(vals)
+            located, _ = locate_groups(
+                betas_j, jnp.asarray(np.stack(grouped)), avail, k=K, e=E)
+            found = set(np.where(np.asarray(located).any(0))[0])
+            if scenario == "clean":
+                false_pos += bool(found)
+            else:
+                hits += found == set(bad)
+        if scenario == "clean":
+            rate = false_pos / trials
+            out["gated_clean_fp"] = rate
+            emit("fig_cvote_ablation/gated_clean", 0.0,
+                 f"false_positive_rate={rate:.3f}")
+        else:
+            rate = hits / trials
+            out[f"gated_{scenario}"] = rate
+            emit(f"fig_cvote_ablation/gated_{scenario}", 0.0,
+                 f"locate_success={rate:.3f}")
     return out
 
 

@@ -25,7 +25,7 @@ from repro.serving.latency import LatencyModel, percentile_table
 from repro.serving.scheduler import (CodedScheduler, EngineExecutor,
                                      SchedulerConfig, poisson_arrivals)
 
-SCHED_REQUESTS = 4000
+SCHED_REQUESTS = common.scaled(4000, 400)
 SCHED_RATE_RPS = 20_000.0
 
 

@@ -6,12 +6,18 @@ grouped K=4 per group, Berrut-encoded into 6 coded streams/group (S=1),
 and decoded autoregressively for 8 rounds; every round's straggler mask
 derives from per-worker completion times on the event clock (the decode
 fires when the fastest ``wait_for`` streams land).  With --e 1 a
-Byzantine worker corrupts its logits each round and is located +
-excluded by Algorithm 2.  Per-request p50/p99 latency and goodput are
-reported against the uncoded wait-for-all baseline.
+stateful adversary (--attack persistent|intermittent|colluding) corrupts
+compromised workers' logits every coded round; the vote-gated locator
+excludes them and (with --quarantine) repeat offenders stop being
+dispatched to until probation expires.  Per-request p50/p99 latency,
+goodput, and the Byzantine scoreboard (detection precision/recall,
+corrupted-decode rate, quarantine events) are reported against the
+uncoded wait-for-all baseline.
 
   PYTHONPATH=src python examples/serve_coded_llm.py
   PYTHONPATH=src python examples/serve_coded_llm.py --e 1 --steps 4
+  PYTHONPATH=src python examples/serve_coded_llm.py --e 1 \
+      --attack colluding --attack-rate 0.5 --quarantine
   PYTHONPATH=src python examples/serve_coded_llm.py --rate 500 --slo-ms 40
 """
 
@@ -29,6 +35,17 @@ def main():
     ap.add_argument("--e", type=int, default=0)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--attack", default="persistent",
+                    choices=["persistent", "intermittent", "colluding"],
+                    help="adversary behavior model (active when --e > 0)")
+    ap.add_argument("--attack-rate", type=float, default=1.0,
+                    help="per-dispatch corruption probability")
+    ap.add_argument("--attack-placement", default="random",
+                    choices=["random", "worst_case"])
+    ap.add_argument("--byz-sigma", type=float, default=50.0)
+    ap.add_argument("--quarantine", action="store_true",
+                    help="quarantine repeatedly-located workers")
+    ap.add_argument("--probation-ms", type=float, default=200.0)
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="Poisson arrival rate, requests/second")
     ap.add_argument("--deadline-ms", type=float, default=5.0,
@@ -38,8 +55,12 @@ def main():
     args = ap.parse_args()
     serve.run(args.arch, reduced=True, requests=args.requests, k=args.k,
               s=args.s, e=args.e, prompt_len=args.prompt_len,
-              steps=args.steps, byz_sigma=50.0, rate_rps=args.rate,
-              flush_deadline_ms=args.deadline_ms, slo_ms=args.slo_ms)
+              steps=args.steps, byz_sigma=args.byz_sigma,
+              rate_rps=args.rate, flush_deadline_ms=args.deadline_ms,
+              slo_ms=args.slo_ms, attack=args.attack,
+              attack_rate=args.attack_rate,
+              attack_placement=args.attack_placement,
+              quarantine=args.quarantine, probation_ms=args.probation_ms)
 
 
 if __name__ == "__main__":

@@ -12,8 +12,6 @@ below the unigram entropy — the planted bigram structure is learned.
 
 import argparse
 
-from repro import configs
-from repro.launch import train as train_launch
 from repro.models.config import ModelConfig
 
 
@@ -50,9 +48,8 @@ def _run_with_config(cfg, steps, batch, seq):
     import time
 
     import jax
-    import numpy as np
 
-    from repro.data import ShardedLoader, SyntheticLMDataset
+    from repro.data import SyntheticLMDataset
     from repro.models import init_params
     from repro.optim import OptimizerConfig, init_opt_state
     from repro.training import TrainConfig, train_step

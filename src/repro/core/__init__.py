@@ -6,9 +6,11 @@ from repro.core.berrut import (CodingConfig, chebyshev_first_kind,
 from repro.core.engine import (ApproxIFEREngine, coded_inference,
                                decode_coded_preds, decode_groups,
                                encode_groups, group_queries,
+                               locate_and_decode,
                                mask_from_completion_times)
 from repro.core.error_locator import (locate_errors,
-                                      locate_errors_from_logits)
+                                      locate_errors_from_logits,
+                                      locate_groups, vote_errors)
 from repro.core.replication import replicated_inference, replication_workers
 from repro.core.parity import parm_inference
 
@@ -17,6 +19,7 @@ __all__ = [
     "encode", "decode", "encode_matrix", "decode_matrix",
     "ApproxIFEREngine", "coded_inference", "encode_groups", "decode_groups",
     "decode_coded_preds", "group_queries", "mask_from_completion_times",
-    "locate_errors", "locate_errors_from_logits",
+    "locate_and_decode", "locate_errors", "locate_errors_from_logits",
+    "locate_groups", "vote_errors",
     "replicated_inference", "replication_workers", "parm_inference",
 ]

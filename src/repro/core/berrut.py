@@ -18,7 +18,6 @@ import dataclasses
 import functools
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -131,6 +130,22 @@ class CodingConfig:
         if self.e == 0:
             return self.k
         return 2 * (self.k + self.e)
+
+    @property
+    def decode_quorum(self) -> int:
+        """Minimal adaptive wait-for of the online scheduler (DESIGN.md §8).
+
+        The BW-type locator needs K+2E responses before the error-locator
+        system is determined (P has K+E coefficients, Lambda contributes E
+        roots); after excluding the E located workers, K+E >= K honest
+        responses remain for the Berrut decode.  This is tighter than the
+        paper's offline ``wait_for`` = 2(K+E) — the event loop answers as
+        soon as the K+2E fastest coded workers land and leans on the
+        vote-gated locator + speculative correction for the rest.
+        """
+        if self.e == 0:
+            return self.k
+        return min(self.k + 2 * self.e, self.num_workers)
 
     @property
     def overhead(self) -> float:

@@ -9,6 +9,7 @@ i" is the device slice owning coded stream i.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -17,7 +18,7 @@ import numpy as np
 
 from repro.core import berrut
 from repro.core.berrut import CodingConfig
-from repro.core.error_locator import locate_errors_from_logits
+from repro.core.error_locator import locate_groups, vote_coordinates
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,31 +71,76 @@ def apply_byzantine(coded_preds: jnp.ndarray, byz_mask: Optional[jnp.ndarray],
     return coded_preds + m * noise
 
 
+# Trace-time side effect: incremented once per (shape, cfg) compilation of
+# ``locate_and_decode`` — the compile-count guard in tests asserts the whole
+# serving run reuses ONE jitted program instead of re-tracing per batch or
+# looping per coordinate in Python.
+LOCATE_AND_DECODE_TRACES = 0
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def locate_and_decode(cfg: CodingConfig, preds: jnp.ndarray,
+                      avail: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                 jnp.ndarray]:
+    """Single jitted locate -> exclude -> decode over all groups (Alg. 1-3).
+
+    The whole Byzantine pipeline in one XLA program: pick the Algorithm-2
+    vote coordinates, run the vmapped BW locator over groups x coordinates,
+    gate the verdicts on a vote majority, and Berrut-decode each group with
+    its own exclusion mask.  ``CodingConfig`` is hashable and static, so
+    every call with the same coding + shapes reuses one compilation.
+
+    Args:
+      cfg:   static coding parameters (requires ``cfg.e > 0``).
+      preds: (G, N+1, ...) coded predictions.
+      avail: (N+1,) or (G, N+1) availability (stragglers already zeroed).
+
+    Returns:
+      decoded: (G*K, ...) predictions with located workers excluded.
+      located: (G, N+1) bool vote-gated Byzantine verdicts.
+      votes:   (G, N+1) int32 raw Algorithm-2 tallies.
+      masks:   (G, N+1) the per-group decode masks actually used.
+    """
+    global LOCATE_AND_DECODE_TRACES
+    LOCATE_AND_DECODE_TRACES += 1
+    g = preds.shape[0]
+    flat = preds.reshape(g, cfg.num_workers, -1).astype(jnp.float32)
+    coords = vote_coordinates(flat.shape[-1], cfg.c_vote)
+    betas = jnp.asarray(cfg.betas, jnp.float32)
+    located, votes = locate_groups(betas, flat[:, :, coords], avail,
+                                   k=cfg.k, e=cfg.e)
+    avail2d = avail if avail.ndim == 2 else jnp.broadcast_to(
+        avail, (g, cfg.num_workers))
+    masks = avail2d.astype(preds.dtype) * (1.0 - located.astype(preds.dtype))
+    decoded = jax.vmap(
+        lambda p, m: berrut.decode(cfg, p, m, axis=0))(preds, masks)
+    return ungroup(decoded), located, votes, masks
+
+
 def decode_coded_preds(cfg: CodingConfig, preds: jnp.ndarray,
-                       avail: jnp.ndarray) -> jnp.ndarray:
+                       avail: jnp.ndarray, *,
+                       locate: Optional[bool] = None) -> jnp.ndarray:
     """Decode grouped coded predictions under an availability mask.
 
     (G, N+1, ...) coded predictions + (N+1,) mask -> (G*K, ...) outputs.
-    With E > 0 the error locator (Algorithm 2) runs per group first and
-    located Byzantine workers are excluded from the mask.  This is THE
-    decode path: both ``coded_inference`` and the event-driven scheduler
-    call it, so a scheduler-derived mask decodes bit-identically to a
-    hand-fed one.
+    With E > 0 the jitted ``locate_and_decode`` pipeline runs per group
+    and vote-confirmed Byzantine workers are excluded from the mask.  This
+    is THE decode path: ``coded_inference``, the event-driven scheduler,
+    and the benchmarks all call it, so a scheduler-derived mask decodes
+    bit-identically to a hand-fed one.
+
+    ``locate=False`` forces the plain masked decode even when ``cfg.e > 0``
+    — used for ground-truth references (decode with the true Byzantine
+    mask already excluded) and for speculative decodes below the K+2E
+    locator quorum.
     """
-    if cfg.e > 0:
-        betas = jnp.asarray(cfg.betas, jnp.float32)
-
-        def locate(group_preds):
-            return locate_errors_from_logits(
-                cfg, betas, group_preds.astype(jnp.float32), avail)
-
-        located = jax.vmap(locate)(preds)             # (G, N+1) bool
-        per_group = avail * (1.0 - located.astype(preds.dtype))
-        decoded = jax.vmap(
-            lambda p, m: berrut.decode(cfg, p, m, axis=0))(preds, per_group)
-    else:
-        decoded = decode_groups(cfg, preds, avail)
-    return ungroup(decoded)
+    if locate is None:
+        locate = cfg.e > 0
+    if locate and cfg.e > 0:
+        decoded, _, _, _ = locate_and_decode(cfg, preds, avail)
+        return decoded
+    return ungroup(decode_groups(cfg, preds, avail))
 
 
 def mask_from_completion_times(
@@ -132,6 +178,7 @@ def coded_inference(
     byz_mask: Optional[jnp.ndarray] = None,
     byz_rng: Optional[jax.Array] = None,
     byz_sigma: float = 10.0,
+    locate: Optional[bool] = None,
 ) -> jnp.ndarray:
     """End-to-end ApproxIFER pipeline (Fig. 4).
 
@@ -144,6 +191,9 @@ def coded_inference(
         via ``mask_from_completion_times``.
       byz_mask:   (N+1,) 1 = worker is Byzantine (its result is corrupted).
       byz_rng / byz_sigma: corruption noise.
+      locate:     force the error locator on/off (default: on iff E > 0);
+        ``locate=False`` decodes with the given mask as-is — the reference
+        path when the true Byzantine mask is known and already excluded.
 
     Returns:
       (B, C...) approximate predictions \\hat Y.
@@ -161,7 +211,7 @@ def coded_inference(
     if straggler_mask is None:
         straggler_mask = jnp.ones((cfg.num_workers,), preds.dtype)
 
-    return decode_coded_preds(cfg, preds, straggler_mask)
+    return decode_coded_preds(cfg, preds, straggler_mask, locate=locate)
 
 
 class ApproxIFEREngine:

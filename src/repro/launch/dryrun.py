@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.shapes import SHAPES, serving_coding
@@ -27,7 +26,7 @@ from repro.core.berrut import CodingConfig
 from repro.launch import hlo_analysis, shardings, specs
 from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
                                make_production_mesh)
-from repro.models import cache_axes, logical_axes, partitioning
+from repro.models import logical_axes, partitioning
 from repro.models.model import lm_loss  # noqa: F401  (import check)
 from repro.optim import OptimizerConfig, opt_state_axes
 from repro.serving.coded_serving import (CodedServingState,

@@ -6,11 +6,17 @@ Poisson clock, the deadline-flushing batcher forms groups of K, groups
 are Berrut-encoded, and every autoregressive round is a coded dispatch
 whose straggler mask derives from per-worker completion times sampled
 from the latency model — the decode fires the moment the fastest
-``wait_for`` coded streams land.  With E > 0 a Byzantine worker corrupts
-its logits each round and is located + excluded by Algorithm 2.
+``wait_for`` coded streams land.  With E > 0 a stateful adversary
+(``--attack persistent|intermittent|colluding``) corrupts compromised
+workers' logits at completion time; the vote-gated locator excludes
+them, reputation accumulates, and (with ``--quarantine``) repeat
+offenders stop being dispatched to until their probation expires.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --k 4 --s 1 --steps 8
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 16 --k 4 --e 1 --attack colluding --attack-rate 0.5 \
+      --quarantine
 """
 
 from __future__ import annotations
@@ -24,14 +30,18 @@ import numpy as np
 from repro import configs
 from repro.core.berrut import CodingConfig
 from repro.models import init_params
-from repro.serving import (CodedLLMExecutor, CodedScheduler, LatencyModel,
-                           SchedulerConfig, percentile_table)
+from repro.serving import (AdversaryConfig, CodedLLMExecutor, CodedScheduler,
+                           LatencyModel, QuarantineConfig, SchedulerConfig,
+                           percentile_table)
 
 
 def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         prompt_len: int, steps: int, byz_sigma: float, seed: int = 0,
         rate_rps: float = 2000.0, flush_deadline_ms: float = 5.0,
-        groups_per_batch: int = 2, slo_ms: float | None = None):
+        groups_per_batch: int = 2, slo_ms: float | None = None,
+        attack: str = "persistent", attack_rate: float = 1.0,
+        attack_placement: str = "random", quarantine: bool = False,
+        probation_ms: float = 200.0):
     cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
     coding = CodingConfig(k=k, s=s, e=e)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -41,16 +51,27 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
           f"of K={k} x {coding.num_workers} coded streams "
           f"(overhead {coding.overhead:.2f}x, replication would need "
           f"{(s + 1) * k if e == 0 else (2 * e + 1) * k} workers/group)")
+    if e:
+        print(f"adaptive wait-for {coding.decode_quorum} of "
+              f"{coding.num_workers} (locator quorum K+2E; paper offline "
+              f"wait_for {coding.wait_for}), attack={attack} "
+              f"rate={attack_rate} sigma={byz_sigma} "
+              f"quarantine={'on' if quarantine else 'off'}")
 
     latency_model = LatencyModel()
     executor = CodedLLMExecutor(cfg, coding, params, steps=steps,
-                                max_len=prompt_len + steps + 2,
-                                byz_rate=1.0 if e else 0.0,
-                                byz_sigma=byz_sigma, seed=seed)
+                                max_len=prompt_len + steps + 2, seed=seed)
+    adversary = (AdversaryConfig(kind=attack, attack_rate=attack_rate,
+                                 sigma=byz_sigma,
+                                 placement=attack_placement, seed=seed)
+                 if e else None)
     sched = CodedScheduler(
         SchedulerConfig(coding=coding, groups_per_batch=groups_per_batch,
                         flush_deadline_ms=flush_deadline_ms, slo_ms=slo_ms,
-                        seed=seed),
+                        seed=seed, adversary=adversary,
+                        quarantine=(QuarantineConfig(
+                            probation_ms=probation_ms)
+                            if quarantine and e else None)),
         latency_model, executor)
 
     payloads = [rng.randint(0, cfg.vocab_size,
@@ -91,6 +112,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--byz-sigma", type=float, default=50.0)
+    ap.add_argument("--attack", default="persistent",
+                    choices=["persistent", "intermittent", "colluding"],
+                    help="adversary behavior model (active when --e > 0)")
+    ap.add_argument("--attack-rate", type=float, default=1.0,
+                    help="per-dispatch corruption probability "
+                         "(intermittent/colluding)")
+    ap.add_argument("--attack-placement", default="random",
+                    choices=["random", "worst_case"],
+                    help="compromised-worker placement")
+    ap.add_argument("--quarantine", action="store_true",
+                    help="stop dispatching to repeatedly-located workers")
+    ap.add_argument("--probation-ms", type=float, default=200.0,
+                    help="quarantine duration before re-admission")
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="Poisson arrival rate, requests/second")
     ap.add_argument("--deadline-ms", type=float, default=5.0,
@@ -103,7 +137,10 @@ def main():
     run(args.arch, args.reduced, args.requests, args.k, args.s, args.e,
         args.prompt_len, args.steps, args.byz_sigma, rate_rps=args.rate,
         flush_deadline_ms=args.deadline_ms, groups_per_batch=args.groups,
-        slo_ms=args.slo_ms)
+        slo_ms=args.slo_ms, attack=args.attack,
+        attack_rate=args.attack_rate,
+        attack_placement=args.attack_placement,
+        quarantine=args.quarantine, probation_ms=args.probation_ms)
 
 
 if __name__ == "__main__":

@@ -7,12 +7,11 @@ frame/patch embeddings (assignment carve-out).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.shapes import ShapeConfig, serving_coding
+from repro.configs.shapes import ShapeConfig
 from repro.core.berrut import CodingConfig
 from repro.models import abstract_params, init_caches
 from repro.models.config import ModelConfig

@@ -10,8 +10,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import save, step_path

@@ -10,7 +10,7 @@ Covers the attention flavours of every assigned architecture:
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

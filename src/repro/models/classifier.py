@@ -7,7 +7,6 @@ as ParM trains a parity network of the same family as the base model.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ logical axes to mesh shardings (partitioning.py).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ each carry their own state — DESIGN.md §4/§5).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ table — the entry point the ApproxIFER engine uses for coded queries
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ Kinds:  "A" attention+MLP   "M" attention+MoE   "S" Mamba2 (SSD)
 
 from __future__ import annotations
 
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ what lets grok-1 (314B) fit: m/v fp32 fully sharded over all 256 chips.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

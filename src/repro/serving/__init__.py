@@ -1,21 +1,32 @@
 from repro.serving.coded_serving import (CodedServingState, coded_decode_step,
-                                         coded_prefill)
-from repro.serving.failures import (sample_byzantine_mask,
+                                         coded_prefill, locate)
+from repro.serving.failures import (Adversary, AdversaryConfig, RoundAttack,
+                                    corrupt_coded_preds, make_adversary,
+                                    sample_byzantine_mask,
                                     sample_straggler_mask,
+                                    worst_case_byzantine_mask,
+                                    worst_case_byzantine_placement,
                                     worst_case_straggler_mask)
 from repro.serving.batcher import GroupBatcher, Request, BatchPlan
 from repro.serving.latency import (LatencyModel, percentile_table,
                                    simulate_approxifer)
 from repro.serving.metrics import (RequestRecord, ServingMetrics,
                                    summarize_latencies)
+from repro.serving.quarantine import (QuarantineConfig, QuarantineEvent,
+                                      WorkerReputation)
 from repro.serving.scheduler import (CodedLLMExecutor, CodedScheduler,
-                                     EngineExecutor, SchedulerConfig,
-                                     poisson_arrivals)
+                                     EngineExecutor, LocateReport,
+                                     SchedulerConfig, poisson_arrivals)
 
 __all__ = ["CodedServingState", "coded_prefill", "coded_decode_step",
+           "locate", "Adversary", "AdversaryConfig", "RoundAttack",
+           "corrupt_coded_preds", "make_adversary",
            "sample_straggler_mask", "sample_byzantine_mask",
+           "worst_case_byzantine_mask", "worst_case_byzantine_placement",
            "worst_case_straggler_mask", "GroupBatcher", "Request",
            "BatchPlan", "LatencyModel", "percentile_table",
            "simulate_approxifer", "RequestRecord", "ServingMetrics",
-           "summarize_latencies", "CodedLLMExecutor", "CodedScheduler",
-           "EngineExecutor", "SchedulerConfig", "poisson_arrivals"]
+           "summarize_latencies", "QuarantineConfig", "QuarantineEvent",
+           "WorkerReputation", "CodedLLMExecutor", "CodedScheduler",
+           "EngineExecutor", "LocateReport", "SchedulerConfig",
+           "poisson_arrivals"]

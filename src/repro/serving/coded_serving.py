@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import berrut
 from repro.core.berrut import CodingConfig
-from repro.core.error_locator import locate_errors_from_logits
+from repro.core.error_locator import locate_groups, vote_coordinates
 from repro.kernels import ops
 from repro.models import decode_step, embed_inputs, init_caches, prefill
 from repro.models.config import ModelConfig
@@ -72,22 +72,51 @@ def _decode_logits(coding: CodingConfig, coded_logits: jnp.ndarray,
     return out.reshape(g * coding.k, v)
 
 
-def _locate_and_mask(coding: CodingConfig, coded_logits: jnp.ndarray,
-                     avail: jnp.ndarray) -> jnp.ndarray:
-    """Run Algorithm 2 per group and exclude located Byzantine workers."""
-    if coding.e == 0:
-        return avail
+def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
+           avail: jnp.ndarray
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Vote-gated Algorithm 2 per group over in-program coded logits.
+
+    Shares ``core.error_locator.locate_groups`` with the engine's jitted
+    ``locate_and_decode``, so the offline serving steps and the online
+    scheduler locate bit-identically given the same logits and mask.
+
+    coded_logits: (G*(N+1), V).  Returns (per-group decode masks (G, N+1),
+    located (G, N+1) bool, votes (G, N+1) int32); with E == 0 the masks
+    collapse to broadcasting ``avail`` and nothing is located.
+    """
     g = coded_logits.shape[0] // coding.num_workers
+    if coding.e == 0:
+        masks = jnp.broadcast_to(avail, (g, coding.num_workers))
+        zeros = jnp.zeros((g, coding.num_workers), jnp.int32)
+        return masks, zeros.astype(bool), zeros
     grouped = coded_logits.reshape(g, coding.num_workers, -1)
+    grouped = grouped.astype(jnp.float32)
+    coords = vote_coordinates(grouped.shape[-1], coding.c_vote)
     betas = jnp.asarray(coding.betas, jnp.float32)
+    located, votes = locate_groups(betas, grouped[:, :, coords], avail,
+                                   k=coding.k, e=coding.e)
+    masks = avail[None, :] * (1.0 - located.astype(avail.dtype))
+    return masks, located, votes
 
-    def locate(group):
-        return locate_errors_from_logits(coding, betas,
-                                         group.astype(jnp.float32), avail)
 
-    located = jax.vmap(locate)(grouped)                   # (G, N+1)
-    # per-group masks: decode must also be per-group
-    return avail[None, :] * (1.0 - located.astype(avail.dtype))
+def _corrupt_logits(coding: CodingConfig, coded_logits: jnp.ndarray,
+                    byz_mask: jnp.ndarray, byz_rng: jax.Array,
+                    sigma: float, collude: bool) -> jnp.ndarray:
+    """Byzantine workers corrupt their coded logits (paper §4.2).  With
+    ``collude`` every compromised worker in a group tells the SAME lie."""
+    g = coded_logits.shape[0] // coding.num_workers
+    v = coded_logits.shape[-1]
+    if collude:
+        noise = jax.random.normal(byz_rng, (g, 1, v), coded_logits.dtype)
+        noise = jnp.broadcast_to(
+            noise, (g, coding.num_workers, v)).reshape(g * coding.num_workers,
+                                                       v)
+    else:
+        noise = jax.random.normal(byz_rng, coded_logits.shape,
+                                  coded_logits.dtype)
+    per_stream = jnp.tile(byz_mask, (g,))
+    return coded_logits + sigma * per_stream[:, None] * noise
 
 
 def _decode_logits_per_group(coding: CodingConfig, coded_logits, masks):
@@ -112,14 +141,37 @@ class CodedServingState:
     pos: jnp.ndarray               # () int32 — next position to write
 
 
+def _finish_round(coding: CodingConfig, coded_logits: jnp.ndarray,
+                  straggler_mask: Optional[jnp.ndarray], with_report: bool):
+    """Shared tail of every coded round: locate -> exclude -> decode."""
+    avail = (straggler_mask if straggler_mask is not None
+             else jnp.ones((coding.num_workers,), jnp.float32))
+    masks, located, votes = locate(coding, coded_logits, avail)
+    if coding.e == 0:
+        logits = _decode_logits(coding, coded_logits, avail)
+    else:
+        logits = _decode_logits_per_group(coding, coded_logits, masks)
+    if with_report:
+        return logits, (located, votes)
+    return logits, None
+
+
 def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                   inputs: dict, max_len: int,
                   straggler_mask: Optional[jnp.ndarray] = None,
-                  cache_dtype=None) -> Tuple[jnp.ndarray, CodedServingState]:
+                  cache_dtype=None,
+                  byz_mask: Optional[jnp.ndarray] = None,
+                  byz_rng: Optional[jax.Array] = None,
+                  byz_sigma: float = 10.0, byz_collude: bool = False,
+                  with_report: bool = False):
     """Prefill G*K real prompts as G*(N+1) coded streams.
 
     inputs: modality dict with leading batch = G*K real queries.
-    Returns (decoded last-token logits (G*K, V), serving state).
+    Byzantine workers (``byz_mask``) corrupt their prefill logits exactly
+    like a decode step's — the adversary does not wait for decode rounds.
+    Returns (decoded last-token logits (G*K, V), serving state); with
+    ``with_report`` also the (located, votes) pair of the vote-gated
+    locator for reputation tracking.
     """
     x = embed_inputs(cfg, params, inputs)                 # (G*K, S, d)
     gk, s, d = x.shape
@@ -130,15 +182,15 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     coded_logits, caches = prefill(cfg, params, {"embeddings": coded},
                                    caches)
     coded_logits = _real_streams(coding, coded_logits, g)
-    avail = (straggler_mask if straggler_mask is not None
-             else jnp.ones((coding.num_workers,), jnp.float32))
-    masks = _locate_and_mask(coding, coded_logits, avail)
-    if masks.ndim == 1:
-        logits = _decode_logits(coding, coded_logits, masks)
-    else:
-        logits = _decode_logits_per_group(coding, coded_logits, masks)
+    if byz_mask is not None and byz_rng is not None:
+        coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
+                                       byz_rng, byz_sigma, byz_collude)
+    logits, report = _finish_round(coding, coded_logits, straggler_mask,
+                                   with_report)
     state = CodedServingState(caches=caches,
                               pos=jnp.asarray(s, jnp.int32))
+    if with_report:
+        return logits, state, report
     return logits, state
 
 
@@ -147,14 +199,17 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
                       straggler_mask: Optional[jnp.ndarray] = None,
                       byz_mask: Optional[jnp.ndarray] = None,
                       byz_rng: Optional[jax.Array] = None,
-                      byz_sigma: float = 10.0,
-                      ) -> Tuple[jnp.ndarray, CodedServingState]:
+                      byz_sigma: float = 10.0, byz_collude: bool = False,
+                      with_report: bool = False):
     """One coded decode step.
 
     tokens: (G*K, 1) int32 — the sampled next token of each REAL stream.
     The K token embeddings of each group are Berrut-encoded into N+1 coded
-    embeddings appended to the coded caches (DESIGN.md §5).
-    Returns (decoded logits (G*K, V), new state).
+    embeddings appended to the coded caches (DESIGN.md §5).  With
+    ``byz_collude`` every Byzantine worker in a group adds the SAME noise
+    (the colluding adversary of ``serving.failures``).
+    Returns (decoded logits (G*K, V), new state); with ``with_report``
+    also the locator's (located, votes).
     """
     from repro.models import layers as _layers
     x = _layers.embed_tokens(cfg, params["embeddings"], tokens)  # (G*K,1,d)
@@ -165,15 +220,11 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
                                        {"embeddings": coded}, state.pos)
     coded_logits = _real_streams(coding, coded_logits, g)
     if byz_mask is not None and byz_rng is not None:
-        noise = byz_sigma * jax.random.normal(byz_rng, coded_logits.shape,
-                                              coded_logits.dtype)
-        per_stream = jnp.tile(byz_mask, (g,))
-        coded_logits = coded_logits + per_stream[:, None] * noise
-    avail = (straggler_mask if straggler_mask is not None
-             else jnp.ones((coding.num_workers,), jnp.float32))
-    masks = _locate_and_mask(coding, coded_logits, avail)
-    if masks.ndim == 1:
-        logits = _decode_logits(coding, coded_logits, masks)
-    else:
-        logits = _decode_logits_per_group(coding, coded_logits, masks)
-    return logits, CodedServingState(caches=caches, pos=state.pos + 1)
+        coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
+                                       byz_rng, byz_sigma, byz_collude)
+    logits, report = _finish_round(coding, coded_logits, straggler_mask,
+                                   with_report)
+    new_state = CodedServingState(caches=caches, pos=state.pos + 1)
+    if with_report:
+        return logits, new_state, report
+    return logits, new_state

@@ -3,15 +3,30 @@
 A TPU SPMD step has no per-worker wall clock; failures are availability
 masks over the coded-stream axis (worst case, paper Appendix C) and
 additive-noise corruption for Byzantine workers (paper §4.2).
+
+Beyond the paper's memoryless corruption, this module models **stateful
+adversaries** (DESIGN.md §8): a fixed set of compromised workers that
+corrupt their outputs persistently, intermittently (Bernoulli per coded
+dispatch), or in collusion (the same corruption vector across the whole
+compromised subset — consistent lies are the hard case for a rational
+locator because they resemble evaluations of a *different* rational
+function).  The scheduler's event loop samples one ``RoundAttack`` per
+coded dispatch and applies it to worker outputs at completion time, so
+corruption flows through the same clock that derives straggler masks.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.berrut import CodingConfig
+
+ADVERSARY_KINDS = ("none", "persistent", "intermittent", "colluding")
 
 
 def sample_straggler_mask(coding: CodingConfig, rng: np.random.RandomState,
@@ -47,3 +62,167 @@ def worst_case_straggler_mask(coding: CodingConfig) -> jnp.ndarray:
     if coding.s:
         mask[1:1 + coding.s] = 0.0
     return jnp.asarray(mask)
+
+
+def worst_case_byzantine_placement(coding: CodingConfig,
+                                   num_errors: int | None = None
+                                   ) -> np.ndarray:
+    """Worker indices where the locator's conditioning is worst.
+
+    Chebyshev 2nd-kind nodes cluster at the interval boundary, so an error
+    at a node adjacent to an endpoint forces |Q| to be small at the clean
+    endpoint too — single-coordinate location is ambiguous there and the
+    majority vote has the thinnest margin (measured in
+    ``tests/test_error_locator.py``; the interior is benign).  Returns the
+    E boundary-adjacent interior indices, alternating ends: 1, N-1, 2, ...
+    """
+    e = coding.e if num_errors is None else num_errors
+    n = coding.num_workers
+    order = []
+    lo, hi = 1, n - 2
+    while lo <= hi and len(order) < e:
+        order.append(lo)
+        if len(order) < e and hi != lo:
+            order.append(hi)
+        lo, hi = lo + 1, hi - 1
+    return np.asarray(order[:e], np.int64)
+
+
+def worst_case_byzantine_mask(coding: CodingConfig,
+                              num_errors: int | None = None) -> jnp.ndarray:
+    """(N+1,) 1 = Byzantine, placed where location is hardest (see
+    ``worst_case_byzantine_placement``)."""
+    mask = np.zeros((coding.num_workers,), np.float32)
+    mask[worst_case_byzantine_placement(coding, num_errors)] = 1.0
+    return jnp.asarray(mask)
+
+
+# -- stateful adversary behavior models ----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversaryConfig:
+    """Which workers lie, when, and how loudly.
+
+    kind:        "none" | "persistent" (every dispatch) | "intermittent"
+                 (Bernoulli(attack_rate) per dispatch) | "colluding"
+                 (Bernoulli(attack_rate); the whole compromised subset
+                 applies the SAME corruption vector).
+    num_adversaries: size of the compromised worker set (default E; may
+                 exceed E to model attacks above the correction budget).
+    attack_rate: per-dispatch corruption probability (ignored by
+                 "persistent", which always attacks).
+    sigma:       corruption noise scale (paper §4.2 uses N(0, sigma^2)).
+    placement:   "random" or "worst_case" (locator-adversarial nodes).
+    """
+
+    kind: str = "persistent"
+    num_adversaries: Optional[int] = None
+    attack_rate: float = 1.0
+    sigma: float = 50.0
+    placement: str = "random"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ADVERSARY_KINDS:
+            raise ValueError(f"unknown adversary kind {self.kind!r}; "
+                             f"expected one of {ADVERSARY_KINDS}")
+        if not 0.0 <= self.attack_rate <= 1.0:
+            raise ValueError(f"attack_rate must be in [0, 1], got "
+                             f"{self.attack_rate}")
+        if self.placement not in ("random", "worst_case"):
+            raise ValueError(f"unknown placement {self.placement!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundAttack:
+    """One coded dispatch's corruption, sampled at completion time.
+
+    ``mask`` marks the compromised workers corrupting THIS round (all
+    zeros on rounds the adversary sits out); ``key`` seeds the noise so a
+    speculative decode and the later full decode of the same round see
+    the identical corruption.
+    """
+
+    mask: np.ndarray                  # (N+1,) float32, 1 = corrupts now
+    key: jax.Array                    # corruption noise stream
+    sigma: float
+    collude: bool = False
+
+    @property
+    def active(self) -> bool:
+        return bool(self.mask.sum() > 0)
+
+
+class Adversary:
+    """Stateful adversary: a fixed compromised worker set + per-dispatch
+    behavior.  ``next_round()`` is called once per coded dispatch by the
+    scheduler's event loop."""
+
+    def __init__(self, coding: CodingConfig, config: AdversaryConfig):
+        self.coding = coding
+        self.config = config
+        self._rng = np.random.RandomState(config.seed)
+        self._key = jax.random.PRNGKey(config.seed + 1)
+        m = (coding.e if config.num_adversaries is None
+             else config.num_adversaries)
+        m = min(m, coding.num_workers)
+        if config.kind == "none" or m == 0:
+            self.workers = np.zeros((0,), np.int64)
+        elif config.placement == "worst_case":
+            self.workers = worst_case_byzantine_placement(coding, m)
+        else:
+            self.workers = np.sort(self._rng.choice(
+                coding.num_workers, size=m, replace=False))
+        self.byz_mask = np.zeros((coding.num_workers,), np.float32)
+        self.byz_mask[self.workers] = 1.0
+        self.rounds = 0
+        self.attacked_rounds = 0
+
+    def next_round(self) -> RoundAttack:
+        """Sample this dispatch's corruption (advances the RNG streams)."""
+        self.rounds += 1
+        cfg = self.config
+        attacks = (len(self.workers) > 0
+                   and (cfg.kind == "persistent"
+                        or self._rng.rand() < cfg.attack_rate))
+        self._key, sub = jax.random.split(self._key)
+        if not attacks:
+            return RoundAttack(
+                mask=np.zeros((self.coding.num_workers,), np.float32),
+                key=sub, sigma=cfg.sigma, collude=False)
+        self.attacked_rounds += 1
+        return RoundAttack(mask=self.byz_mask.copy(), key=sub,
+                           sigma=cfg.sigma,
+                           collude=cfg.kind == "colluding")
+
+
+def make_adversary(coding: CodingConfig,
+                   config: Optional[AdversaryConfig]) -> Optional[Adversary]:
+    if config is None or config.kind == "none":
+        return None
+    return Adversary(coding, config)
+
+
+def corrupt_coded_preds(preds: jnp.ndarray,
+                        attack: Optional[RoundAttack]) -> jnp.ndarray:
+    """Apply one round's corruption to (G, N+1, ...) coded predictions.
+
+    Persistent/intermittent workers add independent N(0, sigma^2) noise;
+    colluding workers all add the SAME noise tensor (drawn once per group,
+    broadcast over the worker axis).  Deterministic in ``attack.key``, so
+    recomputing for a speculative and a full decode yields identical lies.
+    """
+    if attack is None or not attack.active:
+        return preds
+    g, n = preds.shape[0], preds.shape[1]
+    if attack.collude:
+        one = jax.random.normal(attack.key, (g, 1) + preds.shape[2:],
+                                preds.dtype)
+        noise = jnp.broadcast_to(one, preds.shape)
+    else:
+        noise = jax.random.normal(attack.key, preds.shape, preds.dtype)
+    shape = [1] * preds.ndim
+    shape[1] = n
+    m = jnp.asarray(attack.mask, preds.dtype).reshape(shape)
+    return preds + attack.sigma * m * noise

@@ -60,9 +60,38 @@ class ServingMetrics:
         self.deadline_flushes = 0     # batches dispatched by deadline
         self.speculative_decodes = 0  # batches early-decoded at the SLO
         self.corrections = 0          # speculative outputs later revised
+        # -- Byzantine pipeline (DESIGN.md §8): one observation per coded
+        # round on which the locator ran, scored against the adversary's
+        # ground truth --
+        self.locate_rounds = 0        # rounds the locator ran on
+        self.attacked_rounds = 0      # rounds with corruption in the decode set
+        self.detection_tp = 0         # located & truly corrupting
+        self.detection_fp = 0         # located but honest
+        self.detection_fn = 0         # corrupting but not located
+        self.corrupted_decodes = 0    # rounds where corruption survived
+        self.quarantine_events = 0    # workers placed in quarantine
+        self.readmissions = 0         # workers re-admitted after probation
 
     def record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+
+    def observe_locate(self, detected, true_corrupt, decode_corrupt: bool
+                       ) -> None:
+        """Score one locate round against the adversary's ground truth.
+
+        detected:       (N+1,) bool — vote-gated located workers.
+        true_corrupt:   (N+1,) bool — workers that actually corrupted this
+                        round AND whose results entered the decode set.
+        decode_corrupt: did corruption survive into any group's decode?
+        """
+        detected = np.asarray(detected, bool)
+        true_corrupt = np.asarray(true_corrupt, bool)
+        self.locate_rounds += 1
+        self.attacked_rounds += int(true_corrupt.any())
+        self.detection_tp += int(np.sum(detected & true_corrupt))
+        self.detection_fp += int(np.sum(detected & ~true_corrupt))
+        self.detection_fn += int(np.sum(~detected & true_corrupt))
+        self.corrupted_decodes += int(decode_corrupt)
 
     # -- derived views ---------------------------------------------------
 
@@ -90,6 +119,24 @@ class ServingMetrics:
         """Completed requests per second of event time."""
         return self.count / self.makespan_ms() * 1e3
 
+    def detection_precision(self) -> float:
+        """Of the workers the locator confidently flagged, how many were
+        truly corrupting?  NaN until a detection happened."""
+        den = self.detection_tp + self.detection_fp
+        return self.detection_tp / den if den else float("nan")
+
+    def detection_recall(self) -> float:
+        """Of the truly-corrupting workers in decode sets, how many were
+        flagged?  NaN until an attacked round was observed."""
+        den = self.detection_tp + self.detection_fn
+        return self.detection_tp / den if den else float("nan")
+
+    def corrupted_decode_rate(self) -> float:
+        """Fraction of locate rounds where corruption survived into a
+        decode (the robustness failure rate under attack)."""
+        return (self.corrupted_decodes / self.locate_rounds
+                if self.locate_rounds else 0.0)
+
     def goodput_rps(self, slo_ms: Optional[float] = None) -> float:
         """Requests served WITHIN the SLO per second of event time.
 
@@ -114,6 +161,16 @@ class ServingMetrics:
             throughput_rps=self.throughput_rps(),
             goodput_rps=self.goodput_rps(),
         )
+        if self.locate_rounds:
+            out.update(
+                locate_rounds=float(self.locate_rounds),
+                attacked_rounds=float(self.attacked_rounds),
+                detection_precision=self.detection_precision(),
+                detection_recall=self.detection_recall(),
+                corrupted_decode_rate=self.corrupted_decode_rate(),
+                quarantine_events=float(self.quarantine_events),
+                readmissions=float(self.readmissions),
+            )
         return out
 
     def format_table(self) -> str:
@@ -131,4 +188,15 @@ class ServingMetrics:
             lines.append(
                 f"speculative decodes {self.speculative_decodes}  "
                 f"corrections {self.corrections}")
+        if self.locate_rounds:
+            lines.append(
+                f"byzantine {self.attacked_rounds}/{self.locate_rounds} "
+                f"rounds attacked  precision "
+                f"{self.detection_precision():.2f}  recall "
+                f"{self.detection_recall():.2f}  corrupted-decode rate "
+                f"{self.corrupted_decode_rate():.3f}")
+            if self.quarantine_events:
+                lines.append(
+                    f"quarantines {self.quarantine_events}  "
+                    f"readmissions {self.readmissions}")
         return "\n".join(lines)

@@ -1,0 +1,131 @@
+"""Per-worker reputation and quarantine policy (DESIGN.md §8).
+
+Every locate round the scheduler feeds the vote-gated Algorithm-2
+verdicts into ``WorkerReputation``.  A worker confidently located in
+``strikes`` of its last ``window`` dispatches is **quarantined**: the
+scheduler stops dispatching to it (its coded stream is pre-masked out of
+the adaptive wait-for selection), which removes the corruption from the
+decode entirely instead of re-locating it every round.  After a
+``probation_ms`` window on the event clock the worker is re-admitted and
+must re-offend to be quarantined again — so a transiently-flaky worker
+recovers, while a persistent adversary oscillates between short
+re-admissions and quarantine.
+
+At most ``coding.e`` workers are quarantined at once: each quarantined
+worker permanently spends one unit of the redundancy budget, and beyond E
+the scheduler could no longer distinguish fresh adversaries anyway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.berrut import CodingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineConfig:
+    """Knobs of the quarantine policy.
+
+    strikes:       confident detections within the window that trigger
+                   quarantine.
+    window:        how many recent dispatches of a worker count.
+    probation_ms:  event-clock quarantine duration before re-admission.
+    max_quarantined: concurrent quarantine cap (default: coding E).
+    """
+
+    strikes: int = 2
+    window: int = 4
+    probation_ms: float = 200.0
+    max_quarantined: Optional[int] = None
+
+    def __post_init__(self):
+        if self.strikes < 1 or self.window < self.strikes:
+            raise ValueError(f"need 1 <= strikes <= window, got {self}")
+        if self.probation_ms <= 0:
+            raise ValueError("probation_ms must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineEvent:
+    """One transition on the event clock ('quarantine' or 'readmit')."""
+
+    t_ms: float
+    worker: int
+    action: str
+
+
+class WorkerReputation:
+    """Accumulates Algorithm-2 verdicts and drives the quarantine policy."""
+
+    def __init__(self, coding: CodingConfig, config: QuarantineConfig):
+        self.coding = coding
+        self.config = config
+        n = coding.num_workers
+        self._cap = (coding.e if config.max_quarantined is None
+                     else config.max_quarantined)
+        self._history: List[Deque[int]] = [
+            deque(maxlen=config.window) for _ in range(n)]
+        self.detections = np.zeros((n,), np.int64)    # lifetime totals
+        self.dispatches = np.zeros((n,), np.int64)
+        self._until = np.full((n,), -np.inf)          # quarantined-until
+        self._quarantined = np.zeros((n,), bool)
+        self.events: List[QuarantineEvent] = []
+
+    # -- queries ---------------------------------------------------------
+
+    def active_mask(self, now_ms: float) -> np.ndarray:
+        """(N+1,) float32: 1 = dispatch to this worker.  Re-admits workers
+        whose probation expired (recording the event)."""
+        expired = self._quarantined & (self._until <= now_ms)
+        for w in np.where(expired)[0]:
+            self._quarantined[w] = False
+            self.events.append(QuarantineEvent(now_ms, int(w), "readmit"))
+        return (~self._quarantined).astype(np.float32)
+
+    @property
+    def quarantined(self) -> np.ndarray:
+        return self._quarantined.copy()
+
+    def counts(self) -> Dict[str, int]:
+        acts = [e.action for e in self.events]
+        return {"quarantines": acts.count("quarantine"),
+                "readmissions": acts.count("readmit")}
+
+    # -- updates ---------------------------------------------------------
+
+    def observe(self, now_ms: float, detected: np.ndarray,
+                dispatched: np.ndarray) -> List[QuarantineEvent]:
+        """Fold one locate round's verdicts into the reputation state.
+
+        detected:   (N+1,) bool — vote-gated located workers this round.
+        dispatched: (N+1,) bool/float — workers whose results were used.
+
+        Returns the quarantine events triggered by this observation.
+        """
+        detected = np.asarray(detected, bool)
+        dispatched = np.asarray(dispatched, bool)
+        new: List[QuarantineEvent] = []
+        self.dispatches += dispatched
+        self.detections += detected & dispatched
+        for w in np.where(dispatched)[0]:
+            self._history[w].append(int(detected[w]))
+        cfg = self.config
+        for w in np.where(detected & dispatched)[0]:
+            if self._quarantined[w]:
+                continue
+            if sum(self._history[w]) < cfg.strikes:
+                continue
+            if int(self._quarantined.sum()) >= self._cap:
+                continue
+            self._quarantined[w] = True
+            self._until[w] = now_ms + cfg.probation_ms
+            self._history[w].clear()
+            ev = QuarantineEvent(now_ms, int(w), "quarantine")
+            self.events.append(ev)
+            new.append(ev)
+        return new

@@ -9,6 +9,16 @@ event clock (``mask_from_completion_times``) instead of a hand-fed mask.
 An optional speculative path early-decodes at a latency SLO from whatever
 workers have landed, then corrects when the full quorum arrives.
 
+Byzantine-robust online serving (DESIGN.md §8): a stateful adversary
+(``serving.failures``) corrupts compromised workers' outputs at
+completion time — the same event that derives the straggler mask — and
+the decode runs the single jitted ``core.engine.locate_and_decode``
+pipeline (vote-gated Algorithm 2 + per-group exclusion).  With E > 0 the
+adaptive wait-for drops to the locator quorum K+2E (``decode_quorum``);
+confirmed detections accumulate per-worker reputation and a quarantine
+policy (``serving.quarantine``) stops dispatching to repeat offenders,
+re-admitting them after probation.
+
 Two executors drive real compute behind the same event loop:
 
   * ``EngineExecutor`` — the pure ``coded_inference`` path (encode ->
@@ -27,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,10 +45,14 @@ import numpy as np
 
 from repro.core.berrut import CodingConfig
 from repro.core.engine import (decode_coded_preds, encode_groups,
-                               group_queries, mask_from_completion_times)
+                               group_queries, locate_and_decode,
+                               mask_from_completion_times)
 from repro.serving.batcher import BatchPlan, GroupBatcher
+from repro.serving.failures import (AdversaryConfig, RoundAttack,
+                                    corrupt_coded_preds, make_adversary)
 from repro.serving.latency import LatencyModel
 from repro.serving.metrics import RequestRecord, ServingMetrics
+from repro.serving.quarantine import QuarantineConfig, WorkerReputation
 
 # Event kinds; the numeric order breaks timestamp ties: a batch-filling
 # arrival dispatches before a flush deadline at the same instant, and a
@@ -65,6 +79,27 @@ class SchedulerConfig:
     flush_deadline_ms: Optional[float] = 2.0   # None: only full batches
     slo_ms: Optional[float] = None             # speculative decode trigger
     seed: int = 0                              # worker-latency stream
+    # Adaptive wait-for; None -> coding.decode_quorum (K with E = 0, the
+    # locator quorum K+2E with E > 0 — tighter than the paper's offline
+    # 2(K+E), see CodingConfig.decode_quorum).
+    wait_for: Optional[int] = None
+    adversary: Optional[AdversaryConfig] = None
+    quarantine: Optional[QuarantineConfig] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LocateReport:
+    """One locate round's verdicts (host-side copies of the jitted
+    pipeline's outputs, per group)."""
+
+    located: np.ndarray               # (G, N+1) bool, vote-gated
+    votes: np.ndarray                 # (G, N+1) int32
+    masks: np.ndarray                 # (G, N+1) decode masks actually used
+
+    @property
+    def detected(self) -> np.ndarray:
+        """(N+1,) bool — located in at least one group this round."""
+        return self.located.any(axis=0)
 
 
 @dataclasses.dataclass
@@ -78,6 +113,10 @@ class InflightBatch:
     dispatch_ms: float = 0.0
     round_masks: List[np.ndarray] = dataclasses.field(default_factory=list)
     round_waits: List[float] = dataclasses.field(default_factory=list)
+    round_attacks: List[Optional[RoundAttack]] = dataclasses.field(
+        default_factory=list)
+    round_reports: List[Optional[LocateReport]] = dataclasses.field(
+        default_factory=list)
     worker_times: List[np.ndarray] = dataclasses.field(default_factory=list)
     outputs: Any = None
     complete_ms: float = 0.0
@@ -101,8 +140,11 @@ class EngineExecutor:
 
     ``dispatch`` runs encode + the hosted model over the coded streams
     (the work the N+1 workers do); ``decode`` applies the event-derived
-    mask via ``decode_coded_preds`` — the same decode ``coded_inference``
-    uses, so outputs match it bit for bit.
+    mask via the same jitted pipeline ``coded_inference`` uses — plain
+    ``decode_coded_preds`` with E = 0, the single ``locate_and_decode``
+    program with E > 0 — so outputs match it bit for bit.  The round's
+    ``RoundAttack`` corrupts the coded predictions at decode (completion)
+    time, before the locator sees them.
     """
 
     rounds = 1
@@ -121,12 +163,29 @@ class EngineExecutor:
         return preds.reshape(coded.shape[0], cfg.num_workers,
                              *preds.shape[1:])
 
-    def step(self, handle, round_idx: int, mask: np.ndarray):
+    def step(self, handle, round_idx: int, mask: np.ndarray,
+             attack: Optional[RoundAttack] = None):
         raise RuntimeError("single-round executor has no step()")
 
-    def decode(self, handle, mask: np.ndarray) -> np.ndarray:
-        avail = jnp.asarray(mask, handle.dtype)
-        return np.asarray(decode_coded_preds(self.coding, handle, avail))
+    def decode(self, handle, mask: np.ndarray,
+               attack: Optional[RoundAttack] = None
+               ) -> Tuple[np.ndarray, Optional[LocateReport]]:
+        cfg = self.coding
+        preds = corrupt_coded_preds(handle, attack)
+        avail = jnp.asarray(mask, preds.dtype)
+        # E-aware decode: below the K+2E locator quorum (speculative
+        # early decodes) the BW system is hopeless — decode plainly and
+        # let the full decode correct; at or above it, run the single
+        # jitted locate -> exclude -> decode program.
+        if cfg.e > 0 and int(np.sum(mask)) >= cfg.decode_quorum:
+            decoded, located, votes, masks = locate_and_decode(
+                cfg, preds, avail)
+            report = LocateReport(located=np.asarray(located),
+                                  votes=np.asarray(votes),
+                                  masks=np.asarray(masks))
+            return np.asarray(decoded), report
+        return np.asarray(
+            decode_coded_preds(cfg, preds, avail, locate=False)), None
 
 
 class CodedLLMExecutor:
@@ -134,8 +193,10 @@ class CodedLLMExecutor:
 
     A dispatched batch runs ``1 + steps`` coded rounds: round 0 is
     ``coded_prefill``, each later round one ``coded_decode_step``.  Every
-    round's straggler mask is the event-derived one for that round.
-    Returns the greedy-decoded token matrix (B, steps + 1).
+    round's straggler mask is the event-derived one for that round, and
+    every round's ``RoundAttack`` (if any) corrupts the compromised
+    workers' coded logits INSIDE the jitted step before the in-program
+    locator runs.  Returns the greedy-decoded token matrix (B, steps + 1).
 
     Note: partial (deadline-flushed) batches change the jitted batch
     shape and recompile; size ``flush_deadline_ms``/load so full batches
@@ -145,61 +206,68 @@ class CodedLLMExecutor:
     supports_speculation = False
 
     def __init__(self, model_cfg, coding: CodingConfig, params, steps: int,
-                 max_len: int, byz_rate: float = 0.0,
-                 byz_sigma: float = 50.0, seed: int = 0):
+                 max_len: int, seed: int = 0):
         from repro.serving.coded_serving import (coded_decode_step,
                                                  coded_prefill)
         self.coding = coding
         self.params = params
         self.rounds = 1 + steps
-        self.byz_rate = byz_rate
-        self.byz_sigma = byz_sigma
-        self._np_rng = np.random.RandomState(seed + 1)
-        self._key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(lambda p, t, m: coded_prefill(
-            model_cfg, coding, p, {"tokens": t}, max_len=max_len,
-            straggler_mask=m))
-        self._decode = jax.jit(lambda p, st, t, m, bm, br: coded_decode_step(
-            model_cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm,
-            byz_rng=br, byz_sigma=byz_sigma))
+        self._prefill = jax.jit(
+            lambda p, t, m, bm, br, bs, collude: coded_prefill(
+                model_cfg, coding, p, {"tokens": t}, max_len=max_len,
+                straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
+                byz_collude=collude, with_report=True),
+            static_argnums=(6,))
+        self._decode = jax.jit(
+            lambda p, st, t, m, bm, br, bs, collude: coded_decode_step(
+                model_cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm,
+                byz_rng=br, byz_sigma=bs, byz_collude=collude,
+                with_report=True),
+            static_argnums=(7,))
 
-    def _byz(self):
-        """With probability ``byz_rate`` per round, corrupt E random
-        workers (the paper's §4.2 setup, per decode step)."""
-        if self.byz_rate <= 0 or self.coding.e == 0:
-            return None, None
-        if self._np_rng.rand() >= self.byz_rate:
-            return None, None
-        idx = self._np_rng.choice(self.coding.num_workers,
-                                  size=self.coding.e, replace=False)
-        byz = np.zeros((self.coding.num_workers,), np.float32)
-        byz[idx] = 1.0
-        self._key, sub = jax.random.split(self._key)
-        return jnp.asarray(byz), sub
+    @staticmethod
+    def _byz_args(attack: Optional[RoundAttack]):
+        if attack is None or not attack.active:
+            return None, None, 0.0, False
+        return (jnp.asarray(attack.mask), attack.key,
+                jnp.asarray(attack.sigma, jnp.float32), attack.collude)
 
     def dispatch(self, queries) -> dict:
         return {"tokens": jnp.asarray(queries, jnp.int32),
                 "state": None, "logits": None, "outs": []}
 
-    def _round(self, handle, round_idx: int, mask: np.ndarray) -> dict:
+    def _round(self, handle, round_idx: int, mask: np.ndarray,
+               attack: Optional[RoundAttack]):
         m = jnp.asarray(mask, jnp.float32)
+        bm, br, bs, collude = self._byz_args(attack)
         if round_idx == 0:
-            logits, state = self._prefill(self.params, handle["tokens"], m)
+            logits, state, report = self._prefill(
+                self.params, handle["tokens"], m, bm, br, bs, collude)
         else:
             nxt = jnp.argmax(handle["logits"], -1)[:, None]
-            byz, key = self._byz()
-            logits, state = self._decode(self.params, handle["state"], nxt,
-                                         m, byz, key)
+            logits, state, report = self._decode(
+                self.params, handle["state"], nxt, m, bm, br, bs, collude)
         handle["logits"], handle["state"] = logits, state
         handle["outs"].append(np.asarray(jnp.argmax(logits, -1)))
-        return handle
+        if self.coding.e > 0:
+            located, votes = report
+            g = located.shape[0]
+            rep = LocateReport(
+                located=np.asarray(located), votes=np.asarray(votes),
+                masks=np.broadcast_to(mask, (g, len(mask)))
+                * (1.0 - np.asarray(located, np.float32)))
+        else:
+            rep = None
+        return handle, rep
 
-    def step(self, handle, round_idx: int, mask: np.ndarray) -> dict:
-        return self._round(handle, round_idx, mask)
+    def step(self, handle, round_idx: int, mask: np.ndarray,
+             attack: Optional[RoundAttack] = None):
+        return self._round(handle, round_idx, mask, attack)
 
-    def decode(self, handle, mask: np.ndarray) -> np.ndarray:
-        handle = self._round(handle, self.rounds - 1, mask)
-        return np.stack(handle["outs"], axis=1)      # (B, rounds)
+    def decode(self, handle, mask: np.ndarray,
+               attack: Optional[RoundAttack] = None):
+        handle, rep = self._round(handle, self.rounds - 1, mask, attack)
+        return np.stack(handle["outs"], axis=1), rep      # (B, rounds)
 
 
 class CodedScheduler:
@@ -209,8 +277,8 @@ class CodedScheduler:
     ``ServingMetrics``; per-request outputs land in ``results`` (keyed by
     uid), the provisional SLO-path responses in ``spec_results`` (only
     for speculatively served requests, before their correction), and
-    per-batch masks/handles in ``batches`` for verification against a
-    direct ``coded_inference`` call.
+    per-batch masks/handles/attacks/locate-reports in ``batches`` for
+    verification against a direct ``coded_inference`` call.
     """
 
     def __init__(self, config: SchedulerConfig, latency_model: LatencyModel,
@@ -218,13 +286,22 @@ class CodedScheduler:
         self.config = config
         self.latency_model = latency_model
         self.executor = executor
+        coding = config.coding
         self.batcher = GroupBatcher(
-            config.coding, groups_per_batch=config.groups_per_batch,
+            coding, groups_per_batch=config.groups_per_batch,
             flush_deadline_ms=config.flush_deadline_ms)
         self.metrics = ServingMetrics(slo_ms=config.slo_ms)
         self.batches: List[InflightBatch] = []
         self.results: Dict[int, np.ndarray] = {}
         self.spec_results: Dict[int, np.ndarray] = {}
+        self._wait_for = (coding.decode_quorum if config.wait_for is None
+                          else config.wait_for)
+        if not 1 <= self._wait_for <= coding.num_workers:
+            raise ValueError(f"wait_for={self._wait_for} out of range for "
+                             f"{coding.num_workers} workers")
+        self.adversary = make_adversary(coding, config.adversary)
+        self.reputation = (WorkerReputation(coding, config.quarantine)
+                           if config.quarantine is not None else None)
         # worker latencies and (fallback) arrivals must be INDEPENDENT
         # streams: derive distinct sub-seeds instead of reusing
         # config.seed for both, which would correlate arrival gaps with
@@ -272,6 +349,10 @@ class CodedScheduler:
                 self._on_spec(t, data)
             elif kind == _ROUND:
                 self._on_round(t, *data)
+        if self.reputation is not None:
+            counts = self.reputation.counts()
+            self.metrics.quarantine_events = counts["quarantines"]
+            self.metrics.readmissions = counts["readmissions"]
         return self.metrics
 
     # -- handlers --------------------------------------------------------
@@ -309,15 +390,27 @@ class CodedScheduler:
 
     def _start_round(self, batch: InflightBatch, now: float,
                      round_idx: int) -> None:
-        """Sample this round's worker completion times and schedule the
-        adaptive wait-for decode trigger."""
+        """Sample this round's worker completion times, the adversary's
+        move, and schedule the adaptive wait-for decode trigger."""
         coding = self.config.coding
         times = self.latency_model.sample(self._rng, coding.num_workers)
-        mask, wait = mask_from_completion_times(coding, times)
+        if self.reputation is not None:
+            # quarantined workers are simply not dispatched to: their
+            # results never land, so the wait-for selection skips them
+            active = self.reputation.active_mask(now)
+            times = np.where(active > 0, times, np.inf)
+            wait = min(self._wait_for, int(active.sum()))
+        else:
+            wait = self._wait_for
+        mask, trigger = mask_from_completion_times(coding, times,
+                                                   wait_for=wait)
+        attack = (self.adversary.next_round()
+                  if self.adversary is not None else None)
         batch.worker_times.append(times)
         batch.round_masks.append(mask)
-        batch.round_waits.append(float(wait))
-        self._push(now + float(wait), _ROUND, (batch, round_idx))
+        batch.round_waits.append(float(trigger))
+        batch.round_attacks.append(attack)
+        self._push(now + float(trigger), _ROUND, (batch, round_idx))
         last = round_idx == getattr(self.executor, "rounds", 1) - 1
         slo = self.config.slo_ms
         if (last and slo is not None
@@ -328,17 +421,25 @@ class CodedScheduler:
                          enumerate(batch.plan.requests) if batch.plan.valid[i])
             target = oldest + slo
             cutoff = target - now          # worker time available pre-SLO
-            if now + float(wait) > target and cutoff > 0:
+            if now + float(trigger) > target and cutoff > 0:
                 landed = (times <= cutoff).astype(np.float32)
                 if landed.sum() >= 1:
                     self._push(target, _SPEC, (batch, landed))
 
     def _on_spec(self, t: float, data) -> None:
-        """SLO hit before the quorum: early-decode from whoever landed."""
+        """SLO hit before the quorum: early-decode from whoever landed.
+
+        The round's corruption (if any) is already in flight, so the
+        speculative decode sees the same lies the full decode will — the
+        E-aware part is in the executor, which skips the locator below
+        the K+2E quorum and lets the full decode correct.
+        """
         batch, landed = data
         batch.spec_ms = t
         batch.spec_mask = landed
-        batch.spec_outputs = self.executor.decode(batch.handle, landed)
+        attack = batch.round_attacks[-1]
+        batch.spec_outputs, _ = self.executor.decode(batch.handle, landed,
+                                                     attack=attack)
         self.metrics.speculative_decodes += 1
         for slot, req in enumerate(batch.plan.requests):
             if batch.plan.valid[slot]:
@@ -348,11 +449,19 @@ class CodedScheduler:
                   round_idx: int) -> None:
         rounds = getattr(self.executor, "rounds", 1)
         mask = batch.round_masks[round_idx]
+        attack = batch.round_attacks[round_idx]
         if round_idx < rounds - 1:
-            batch.handle = self.executor.step(batch.handle, round_idx, mask)
+            batch.handle, report = self.executor.step(batch.handle,
+                                                      round_idx, mask,
+                                                      attack=attack)
+            batch.round_reports.append(report)
+            self._observe(t, mask, attack, report)
             self._start_round(batch, t, round_idx + 1)
             return
-        batch.outputs = self.executor.decode(batch.handle, mask)
+        batch.outputs, report = self.executor.decode(batch.handle, mask,
+                                                     attack=attack)
+        batch.round_reports.append(report)
+        self._observe(t, mask, attack, report)
         batch.complete_ms = t
         corrected = self._corrections(batch)
         for slot, req in enumerate(batch.plan.requests):
@@ -369,6 +478,24 @@ class CodedScheduler:
                 complete_ms=batch.spec_ms if spec else t,
                 speculative=spec,
                 corrected=bool(corrected[slot]) if spec else False))
+
+    def _observe(self, t: float, mask: np.ndarray,
+                 attack: Optional[RoundAttack],
+                 report: Optional[LocateReport]) -> None:
+        """Score one locate round and feed the quarantine policy."""
+        if report is None:
+            return
+        dispatched = mask >= 0.5
+        true_corrupt = ((attack.mask >= 0.5) if attack is not None
+                        else np.zeros_like(dispatched)) & dispatched
+        detected = report.detected
+        # corruption survived if a truly-corrupting worker stayed in any
+        # group's decode mask
+        decode_corrupt = bool(
+            np.any((report.masks >= 0.5) & true_corrupt[None, :]))
+        self.metrics.observe_locate(detected, true_corrupt, decode_corrupt)
+        if self.reputation is not None:
+            self.reputation.observe(t, detected, dispatched)
 
     def _corrections(self, batch: InflightBatch) -> np.ndarray:
         """Per-slot flag: did the full decode revise the speculative

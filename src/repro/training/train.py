@@ -5,7 +5,7 @@ memory lever the grok-1 dry-run needs, EXPERIMENTS.md §Perf)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

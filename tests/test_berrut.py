@@ -1,6 +1,5 @@
 """Unit + property tests for the Berrut coded-computation core."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

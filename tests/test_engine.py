@@ -69,7 +69,7 @@ class TestCodedInference:
         f = _mlp_classifier()
         cfg = CodingConfig(k=8, s=0, e=2, c_vote=10)
         x = _queries(3, 16, 16)
-        from repro.core import berrut, engine
+        from repro.core import engine
         grouped = engine.group_queries(x, cfg.k)
         coded = engine.encode_groups(cfg, grouped)
         flat = coded.reshape(-1, *coded.shape[2:])

@@ -1,6 +1,5 @@
 """Tests for the BW-type rational error locator (Algorithms 1-3)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,10 +8,8 @@ try:
 except ImportError:  # dev-only dep: property tests skip without it
     from _hypothesis_fallback import given, settings, st
 
-from repro.core import berrut
 from repro.core.berrut import CodingConfig
 from repro.core.error_locator import (chebyshev_design, locate_errors,
-                                      locate_errors_from_logits,
                                       q_magnitudes, rational_eval, solve_pq)
 
 

@@ -1,7 +1,6 @@
 """Pallas kernel validation: interpret=True vs pure-jnp oracles,
 swept over shapes and dtypes (assignment deliverable c)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

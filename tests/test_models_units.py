@@ -4,13 +4,11 @@ Mamba2 properties, latency simulator."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # dev-only dep: property tests skip without it
     from _hypothesis_fallback import given, settings, st
 
-from repro import configs
 from repro.core.berrut import CodingConfig
 from repro.kernels import ref
 from repro.models import layers, moe

@@ -1,6 +1,5 @@
 """Optimizer correctness against hand-computed AdamW formulas."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 try:

@@ -4,7 +4,6 @@ reduced-scale lower+compile of every step kind on a multi-device host mesh
 
 import os
 
-import pytest
 
 # Must run in a subprocess-isolated module: jax device count locks on
 # first init.  pytest-forked isn't available, so we use 8 devices for the

@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, training loop, checkpoint, data, batcher,
 and the coded serving steps end-to-end on a reduced model."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +11,7 @@ from repro import configs
 from repro.checkpoint import latest_step, load, save, step_path
 from repro.core.berrut import CodingConfig
 from repro.data import ShardedLoader, SyntheticLMDataset
-from repro.models import decode_step, forward, init_caches, init_params, prefill
+from repro.models import decode_step, init_caches, init_params, prefill
 from repro.optim import OptimizerConfig, init_opt_state, learning_rate
 from repro.serving import (GroupBatcher, coded_decode_step, coded_prefill,
                            sample_byzantine_mask, sample_straggler_mask)

@@ -1,0 +1,134 @@
+"""Scheme faceoff: Berrut vs ParM vs replication vs uncoded, one sweep.
+
+The paper's comparative claims (Figs. 3/5/6 accuracy vs ParM, §1/§4
+overhead vs replication) reproduced through ONE pipeline instead of
+scattered scripts: every registered ``RedundancyScheme`` serves the
+*same* Poisson traffic trace through the *same* event-driven
+``CodedScheduler`` (same arrival clock, same worker-latency stream
+seed), so accuracy, overhead, and tail latency are directly comparable.
+
+Two facets:
+
+  * straggler facet (E=0): all four schemes, heavy-tailed worker
+    latencies, adaptive wait-for per scheme — uncoded waits for all K,
+    ParM/Berrut for K of K+1 / N+1-S, replication for (S+1)K - S.
+  * Byzantine facet (E=1): berrut (locator + exclusion, 2(K+E)+S
+    workers), replication (median over 2E+1 replicas, (2E+1)K workers),
+    and uncoded (defenseless) under a persistent adversary.  ParM has
+    no Byzantine recovery and sits this facet out.
+
+Reported per cell: test accuracy, top-1 agreement with the clean
+uncoded model, worker overhead, p50/p99 latency.  One CSV/JSON row per
+scheme per facet.
+
+  PYTHONPATH=src python -m benchmarks.fig_scheme_faceoff --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+K, S, E_BYZ, SIGMA = 4, 1, 1, 50.0
+RATE_RPS = 20_000.0
+
+
+def _serve(scheme, f, payloads, arrivals, adversary=None, seed=0):
+    from repro.serving import (CodedScheduler, EngineExecutor, LatencyModel,
+                               SchedulerConfig)
+    sched = CodedScheduler(
+        SchedulerConfig(scheme=scheme, groups_per_batch=2,
+                        flush_deadline_ms=2.0, seed=seed,
+                        adversary=adversary),
+        LatencyModel(), EngineExecutor(f, scheme))
+    metrics = sched.run(payloads, arrivals)
+    uids = sorted(sched.results)
+    served = np.stack([sched.results[u] for u in uids])
+    return sched, metrics, served
+
+
+def _cell(emit, out, facet, name, scheme, metrics, served, clean, labels):
+    acc = float(np.mean(np.argmax(served, -1) == labels))
+    agree = float(np.mean(np.argmax(served, -1) == np.argmax(clean, -1)))
+    p = metrics.percentiles()
+    tag = f"{facet}/{name}"
+    out[tag] = {"scheme": name, "facet": facet, "accuracy": acc,
+                "agreement": agree, "overhead": scheme.overhead,
+                "num_workers": scheme.num_workers,
+                "wait_for": scheme.decode_quorum,
+                "p50_ms": p["p50_ms"], "p99_ms": p["p99_ms"]}
+    emit(f"fig_scheme_faceoff/{tag}", 0.0,
+         f"acc={acc:.4f};agreement={agree:.4f};"
+         f"overhead={scheme.overhead:.2f}x;"
+         f"p50={p['p50_ms']:.1f}ms;p99={p['p99_ms']:.1f}ms")
+    return out[tag]
+
+
+def run(emit=None):
+    from benchmarks import common
+    from repro.core.scheme import get_scheme
+    from repro.serving import AdversaryConfig
+    from repro.serving.scheduler import poisson_arrivals
+
+    if emit is None:
+        emit = common.emit
+    n_requests = common.scaled(512, 64)
+    _, _, xte, yte = common.dataset()
+    n_requests = min(n_requests, len(xte))
+    f = common.predict_fn()
+    payloads = [np.asarray(xte[i], np.float32) for i in range(n_requests)]
+    labels = np.asarray(yte[:n_requests])
+    clean = np.asarray(f(np.stack(payloads)))
+    # ONE trace shared by every scheme: same arrivals, same scheduler
+    # seed (hence the same worker-latency stream per dispatch pattern)
+    arrivals = poisson_arrivals(n_requests, RATE_RPS, seed=11)
+
+    out = {}
+    # -- straggler facet (E = 0) ----------------------------------------
+    schemes = [
+        get_scheme("uncoded", k=K),
+        get_scheme("replication", k=K, s=S),
+        get_scheme("parm", k=K, s=S, parity_fn=common.parity_fn(K)),
+        get_scheme("berrut", k=K, s=S),
+        get_scheme("berrut", k=K, s=S, systematic=True),
+    ]
+    for scheme in schemes:
+        _, metrics, served = _serve(scheme, f, payloads, arrivals)
+        name = ("berrut_systematic"
+                if getattr(scheme.config, "systematic", False)
+                else scheme.name)
+        _cell(emit, out, "straggler", name, scheme, metrics, served, clean,
+              labels)
+
+    # -- Byzantine facet (E = 1, persistent adversary) ------------------
+    for scheme in (get_scheme("berrut", k=K, s=S, e=E_BYZ, c_vote=10),
+                   get_scheme("replication", k=K, s=S, e=E_BYZ),
+                   get_scheme("uncoded", k=K)):
+        adv = AdversaryConfig(kind="persistent", sigma=SIGMA, seed=3,
+                              num_adversaries=E_BYZ)
+        _, metrics, served = _serve(scheme, f, payloads, arrivals,
+                                    adversary=adv)
+        _cell(emit, out, "byzantine", scheme.name, scheme, metrics, served,
+              labels=labels, clean=clean)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shapes mode (REPRO_BENCH_SMOKE=1)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # must precede the benchmarks.common import inside run()
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    run()
+
+
+if __name__ == "__main__":
+    # support direct path execution (python benchmarks/fig_scheme_faceoff.py)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -19,10 +19,16 @@ uncoded wait-for-all baseline.
   PYTHONPATH=src python examples/serve_coded_llm.py --e 1 \
       --attack colluding --attack-rate 0.5 --quarantine
   PYTHONPATH=src python examples/serve_coded_llm.py --rate 500 --slo-ms 40
+  PYTHONPATH=src python examples/serve_coded_llm.py --scheme replication
+
+Any registered redundancy scheme (--scheme berrut|parm|replication|
+uncoded) serves through the same event loop; non-Berrut schemes serve
+single-shot next-token prediction over embeddings (DESIGN.md §9).
 """
 
 import argparse
 
+from repro.core.scheme import scheme_names
 from repro.launch import serve
 
 
@@ -35,6 +41,8 @@ def main():
     ap.add_argument("--e", type=int, default=0)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--scheme", default="berrut", choices=scheme_names(),
+                    help="redundancy scheme served through the event loop")
     ap.add_argument("--attack", default="persistent",
                     choices=["persistent", "intermittent", "colluding"],
                     help="adversary behavior model (active when --e > 0)")
@@ -60,7 +68,8 @@ def main():
               slo_ms=args.slo_ms, attack=args.attack,
               attack_rate=args.attack_rate,
               attack_placement=args.attack_placement,
-              quarantine=args.quarantine, probation_ms=args.probation_ms)
+              quarantine=args.quarantine, probation_ms=args.probation_ms,
+              scheme=args.scheme)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,10 @@ from repro.core.error_locator import (locate_errors,
                                       locate_groups, vote_errors)
 from repro.core.replication import replicated_inference, replication_workers
 from repro.core.parity import parm_inference
+from repro.core.scheme import (BerrutScheme, DispatchPlan, ParMScheme,
+                               RedundancyScheme, ReplicationScheme,
+                               UncodedScheme, as_scheme, get_scheme,
+                               register_scheme, scheme_names)
 
 __all__ = [
     "CodingConfig", "chebyshev_first_kind", "chebyshev_second_kind",
@@ -22,4 +26,7 @@ __all__ = [
     "locate_and_decode", "locate_errors", "locate_errors_from_logits",
     "locate_groups", "vote_errors",
     "replicated_inference", "replication_workers", "parm_inference",
+    "RedundancyScheme", "DispatchPlan", "BerrutScheme", "ParMScheme",
+    "ReplicationScheme", "UncodedScheme", "as_scheme", "get_scheme",
+    "register_scheme", "scheme_names",
 ]

@@ -144,13 +144,15 @@ def decode_coded_preds(cfg: CodingConfig, preds: jnp.ndarray,
 
 
 def mask_from_completion_times(
-    cfg: CodingConfig, times: np.ndarray,
+    cfg, times: np.ndarray,
     wait_for: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
     """Derive the straggler mask from the event clock (DESIGN.md §8).
 
     The serving runtime decodes the moment the fastest ``wait_for`` coded
     workers have landed; every slower worker is a straggler *for this
-    batch*.  ``times`` is (..., N+1) per-worker completion times (any
+    batch*.  ``cfg`` is anything exposing the default ``wait_for`` — a
+    ``CodingConfig``, a ``RedundancyScheme``, or a ``DispatchPlan``.
+    ``times`` is (..., N+1) per-worker completion times (any
     clock unit).  Returns ``(mask, trigger)``: the (..., N+1) float32
     availability mask with exactly ``wait_for`` ones per row (stable
     argsort breaks ties deterministically) and the (...,) decode trigger
@@ -228,4 +230,7 @@ class ApproxIFEREngine:
         return encode_groups(self.cfg, group_queries(queries, self.cfg.k))
 
     def decode(self, coded_preds, mask):
-        return ungroup(decode_groups(self.cfg, coded_preds, mask))
+        # Route through THE decode path so the Byzantine locator runs
+        # when cfg.e > 0, exactly as coded_inference / the scheduler do
+        # (a plain masked decode would silently keep corrupted streams).
+        return decode_coded_preds(self.cfg, coded_preds, mask)

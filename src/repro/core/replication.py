@@ -22,6 +22,34 @@ def replication_workers(k: int, s: int, e: int) -> int:
     return (2 * e + 1) * k
 
 
+def recover_from_replicas(preds: jnp.ndarray, mask,
+                          e: int) -> jnp.ndarray:
+    """Per-query replica recovery: (B, R, ...) preds + (R,)/(B, R) mask
+    -> (B, ...).
+
+    THE replication recovery semantics, shared by ``replicated_inference``
+    and ``ReplicationScheme.decode``: with ``e == 0`` each query answers
+    its first available replica; with ``e > 0`` the coordinate-wise
+    median over available replicas (robust to E < R/2 corruptions).  A
+    query whose every replica is masked out answers zeros ("no
+    response") — recovery must never fabricate a result from workers
+    that have not landed.
+    """
+    b, r = preds.shape[:2]
+    mask = jnp.broadcast_to(jnp.asarray(mask, preds.dtype), (b, r))
+    extra = (1,) * (preds.ndim - 2)
+    avail = (mask > 0.5).reshape(b, r, *extra)
+    if e > 0:
+        vals = jnp.where(avail, preds, jnp.nan)
+        med = jnp.nanmedian(vals, axis=1)
+        return jnp.where(jnp.isnan(med), 0.0, med)
+    first = jnp.argmax(mask > 0.5, axis=1)                 # (B,)
+    onehot = jax.nn.one_hot(first, r, dtype=preds.dtype)   # (B, R)
+    picked = jnp.sum(preds * onehot.reshape(b, r, *extra), axis=1)
+    any_avail = (jnp.max(mask, axis=1) > 0.5).astype(preds.dtype)
+    return picked * any_avail.reshape(b, *extra)
+
+
 def replicated_inference(
     predict_fn: Callable[[jnp.ndarray], jnp.ndarray],
     queries: jnp.ndarray,
@@ -35,11 +63,14 @@ def replicated_inference(
 ) -> jnp.ndarray:
     """Replication pipeline with the same mask semantics as the engine.
 
-    queries: (B, ...).  Each query is sent to R = (S+1) or (2E+1) replicas;
-    masks are (R,).  Straggler recovery picks the first available replica;
-    Byzantine recovery takes the coordinate-wise median over replicas
-    (robust to E < R/2 corruptions), which attains base accuracy — the
-    paper's "replication = best case" observation.
+    queries: (B, ...).  Each query is sent to R = (S+1) or (2E+1)
+    replicas; ``straggler_mask`` is (R,) — one pattern shared by the
+    whole batch — or (B, R) with an independent pattern per query, the
+    engine's per-batch mask semantics.  Straggler recovery picks the
+    first available replica; Byzantine recovery takes the
+    coordinate-wise median over replicas (robust to E < R/2
+    corruptions), which attains base accuracy — the paper's
+    "replication = best case" observation.
     """
     r = (s + 1) if e == 0 else (2 * e + 1)
     b = queries.shape[0]
@@ -52,12 +83,6 @@ def replicated_inference(
                                               preds.dtype)
         preds = preds + byz_mask.astype(preds.dtype)[None, :, None] * noise
 
-    if e > 0:
-        return jnp.median(preds, axis=1)
-
     if straggler_mask is None:
         straggler_mask = jnp.ones((r,), preds.dtype)
-    # First available replica: weights one-hot on the first mask==1 entry.
-    first = jnp.argmax(straggler_mask > 0)
-    onehot = jax.nn.one_hot(first, r, dtype=preds.dtype)
-    return jnp.einsum("brc,r->bc", preds, onehot)
+    return recover_from_replicas(preds, straggler_mask, e)

@@ -1,0 +1,470 @@
+"""Pluggable redundancy schemes: one protocol for Berrut / ParM /
+replication / uncoded serving.
+
+The paper's claims are comparative — ApproxIFER vs. ParM (Kosaian et
+al., SOSP'19) and vs. (S+1)/(2E+1) replication — so the serving stack
+must be able to run *any* redundancy scheme through the same event loop.
+``RedundancyScheme`` is that contract: a uniform lifecycle
+
+    plan(groups)   -> DispatchPlan (worker-pool width, wait-for quorum)
+    encode(grouped)-> per-worker payloads     (G, K, ...) -> (G, W, ...)
+    forward(f, coded) -> worker outputs       (G, W, ...) -> (G, W, C)
+    decode(outputs, avail_mask) -> recovered predictions  (G*K, C)
+    locate(outputs, avail_mask) -> decoded + locator verdicts/votes
+
+plus a hashable ``SchemeConfig`` (``scheme.config``) so jitted paths can
+treat the scheme parameters as static.  Schemes register under a string
+name (``get_scheme("berrut"|"parm"|"replication"|"uncoded")``); the
+scheduler, the serving drivers, and the faceoff benchmark are all
+written against the protocol, never against a concrete scheme.
+
+Worker-axis convention (DESIGN.md §3): "worker i" owns stream i of
+every group in a batch, so availability masks are (W,) over the worker
+pool (or (G, W) when per-group exclusion applies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import berrut as berrut_mod
+from repro.core.berrut import CodingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """How one batch of ``groups`` query-groups is spread over workers.
+
+    ``num_workers`` is the worker-pool width W (streams per group);
+    ``wait_for`` the offline decode trigger; ``decode_quorum`` the
+    minimal adaptive wait-for the online scheduler may drop to.
+    """
+
+    scheme: str
+    groups: int
+    k: int
+    num_workers: int
+    wait_for: int
+    decode_quorum: int
+
+    @property
+    def queries(self) -> int:
+        return self.groups * self.k
+
+    @property
+    def overhead(self) -> float:
+        """workers per query — the paper's resource-overhead metric."""
+        return self.num_workers / self.k
+
+
+class RedundancyScheme:
+    """Base class / protocol for redundancy schemes.
+
+    Subclasses set ``name`` and ``config`` (a frozen, hashable dataclass
+    exposing ``k, s, e, num_workers, wait_for, decode_quorum``) and
+    implement ``encode``/``decode``; ``forward`` and ``locate`` have
+    scheme-agnostic defaults (uniform worker compute, no locator).
+    """
+
+    name: str = "base"
+
+    def __init__(self, config: Any):
+        self.config = config
+
+    # -- static parameters (delegated to the hashable config) ------------
+
+    @property
+    def k(self) -> int:
+        return self.config.k
+
+    @property
+    def s(self) -> int:
+        return self.config.s
+
+    @property
+    def e(self) -> int:
+        return self.config.e
+
+    @property
+    def num_workers(self) -> int:
+        return self.config.num_workers
+
+    @property
+    def wait_for(self) -> int:
+        return self.config.wait_for
+
+    @property
+    def decode_quorum(self) -> int:
+        return self.config.decode_quorum
+
+    @property
+    def overhead(self) -> float:
+        return self.num_workers / self.k
+
+    @property
+    def has_locator(self) -> bool:
+        """Whether ``locate`` produces real (non-trivial) verdicts."""
+        return False
+
+    def plan(self, groups: int) -> DispatchPlan:
+        if groups < 1:
+            raise ValueError(f"need groups >= 1, got {groups}")
+        return DispatchPlan(scheme=self.name, groups=groups, k=self.k,
+                            num_workers=self.num_workers,
+                            wait_for=self.wait_for,
+                            decode_quorum=self.decode_quorum)
+
+    # -- lifecycle -------------------------------------------------------
+
+    def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
+        """(G, K, ...) real queries -> (G, W, ...) worker payloads."""
+        raise NotImplementedError
+
+    def forward(self, predict_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                coded: jnp.ndarray) -> jnp.ndarray:
+        """Run the hosted model over every worker stream.
+
+        Default: all W streams run the same model f (Berrut /
+        replication / uncoded).  ParM overrides this — its parity stream
+        runs the learned parity model instead.
+        """
+        g, w = coded.shape[:2]
+        flat = coded.reshape(g * w, *coded.shape[2:])
+        preds = predict_fn(flat)
+        return preds.reshape(g, w, *preds.shape[1:])
+
+    def decode(self, outputs: jnp.ndarray, avail: jnp.ndarray, *,
+               locate: Optional[bool] = None) -> jnp.ndarray:
+        """(G, W, C) worker outputs + (W,)/(G, W) availability ->
+        (G*K, C) recovered predictions."""
+        raise NotImplementedError
+
+    def locate(self, outputs: jnp.ndarray, avail: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Locate-then-decode.  Returns ``(decoded, located, votes,
+        masks)`` with (G, W) verdict/vote/decode-mask arrays.
+
+        Schemes without an error locator return the plain decode plus
+        trivially-empty verdicts (no detections, masks == avail).
+        """
+        decoded = self.decode(outputs, avail)
+        g, w = outputs.shape[:2]
+        avail2d = np.broadcast_to(np.asarray(avail, np.float32), (g, w))
+        located = np.zeros((g, w), bool)
+        votes = np.zeros((g, w), np.int32)
+        return decoded, located, votes, avail2d.copy()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}({self.config})"
+
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, Callable[..., RedundancyScheme]] = {}
+
+
+def register_scheme(name: str):
+    """Class/factory decorator adding a scheme to the string registry."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def scheme_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_scheme(name: str, k: int, *, s: int = 1, e: int = 0,
+               **kwargs) -> RedundancyScheme:
+    """Instantiate a registered scheme by name.
+
+    Common parameters (K queries per group, S stragglers, E Byzantine
+    workers tolerated) are uniform; scheme-specific extras (``systematic``
+    / ``c_vote`` for berrut, ``parity_fn`` for parm) pass through.
+    """
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown scheme {name!r}; registered schemes: "
+                         f"{', '.join(scheme_names())}") from None
+    return factory(k=k, s=s, e=e, **kwargs)
+
+
+def as_scheme(obj) -> RedundancyScheme:
+    """Normalize a scheme argument: a ``RedundancyScheme`` passes
+    through; a bare ``CodingConfig`` wraps into ``BerrutScheme`` (the
+    pre-protocol API everywhere took a CodingConfig)."""
+    if isinstance(obj, RedundancyScheme):
+        return obj
+    if isinstance(obj, CodingConfig):
+        return BerrutScheme(obj)
+    raise TypeError(f"expected RedundancyScheme or CodingConfig, got "
+                    f"{type(obj).__name__}")
+
+
+# ---------------------------------------------------------------- berrut
+
+@register_scheme("berrut")
+def _make_berrut(k: int, s: int = 1, e: int = 0, *, systematic: bool = False,
+                 c_vote: int = 64) -> "BerrutScheme":
+    return BerrutScheme(CodingConfig(k=k, s=s, e=e, systematic=systematic,
+                                     c_vote=c_vote))
+
+
+class BerrutScheme(RedundancyScheme):
+    """ApproxIFER's Berrut rational-interpolation code (paper Eq. 4-11),
+    wrapping ``CodingConfig`` and the jitted ``locate_and_decode``."""
+
+    name = "berrut"
+
+    def __init__(self, coding: CodingConfig):
+        super().__init__(coding)
+        self.coding = coding
+
+    @property
+    def has_locator(self) -> bool:
+        return self.coding.e > 0
+
+    def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
+        return berrut_mod.encode(self.coding, grouped, axis=1)
+
+    def decode(self, outputs: jnp.ndarray, avail: jnp.ndarray, *,
+               locate: Optional[bool] = None) -> jnp.ndarray:
+        from repro.core.engine import decode_coded_preds
+        return decode_coded_preds(self.coding, outputs, avail,
+                                  locate=locate)
+
+    def locate(self, outputs: jnp.ndarray, avail: jnp.ndarray):
+        from repro.core.engine import locate_and_decode
+        if self.coding.e == 0:
+            return super().locate(outputs, avail)
+        decoded, located, votes, masks = locate_and_decode(
+            self.coding, outputs, avail)
+        return (decoded, np.asarray(located), np.asarray(votes),
+                np.asarray(masks))
+
+
+# ---------------------------------------------------------------- uncoded
+
+@dataclasses.dataclass(frozen=True)
+class UncodedConfig:
+    """No redundancy: K queries on K workers, wait for all of them."""
+
+    k: int
+    s: int = 0
+    e: int = 0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"need K >= 1, got {self.k}")
+
+    @property
+    def num_workers(self) -> int:
+        return self.k
+
+    @property
+    def wait_for(self) -> int:
+        return self.k
+
+    @property
+    def decode_quorum(self) -> int:
+        return self.k
+
+
+@register_scheme("uncoded")
+def _make_uncoded(k: int, s: int = 0, e: int = 0) -> "UncodedScheme":
+    # S/E are accepted for registry uniformity but an uncoded system
+    # tolerates neither — it waits for every worker and trusts them all.
+    return UncodedScheme(UncodedConfig(k=k))
+
+
+class UncodedScheme(RedundancyScheme):
+    """The no-redundancy baseline: each query is its own worker stream;
+    the decoder must wait for all K and has no recovery or robustness.
+    The ground truth every other scheme is measured against."""
+
+    name = "uncoded"
+
+    def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
+        return grouped
+
+    def decode(self, outputs: jnp.ndarray, avail: jnp.ndarray, *,
+               locate: Optional[bool] = None) -> jnp.ndarray:
+        # No recovery exists: unavailable slots answer zeros ("no
+        # response"), never a worker output that has not landed —
+        # speculative early decodes below wait_for must not fabricate
+        # results.  wait_for == K keeps this from arising on the full
+        # decode path (the event loop waits for everyone).
+        del locate
+        g, w = outputs.shape[:2]
+        avail2d = jnp.broadcast_to(jnp.asarray(avail, outputs.dtype),
+                                   (g, w))
+        extra = (1,) * (outputs.ndim - 2)
+        out = outputs * avail2d.reshape(g, w, *extra)
+        return out.reshape(-1, *outputs.shape[2:])
+
+
+# ------------------------------------------------------------ replication
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationConfig:
+    """(S+1)-replication for stragglers / (2E+1)-replication for
+    Byzantine workers (paper §1/§5)."""
+
+    k: int
+    s: int = 1
+    e: int = 0
+
+    def __post_init__(self):
+        if self.k < 1 or self.s < 0 or self.e < 0:
+            raise ValueError(f"invalid replication config {self}")
+
+    @property
+    def replicas(self) -> int:
+        return (self.s + 1) if self.e == 0 else (2 * self.e + 1)
+
+    @property
+    def num_workers(self) -> int:
+        return self.k * self.replicas
+
+    @property
+    def wait_for(self) -> int:
+        # Straggler mode tolerates up to S missing workers total (each
+        # query keeps >= 1 of its S+1 replicas); the Byzantine median
+        # needs every replica present.
+        if self.e == 0:
+            return self.num_workers - self.s
+        return self.num_workers
+
+    @property
+    def decode_quorum(self) -> int:
+        return self.wait_for
+
+
+@register_scheme("replication")
+def _make_replication(k: int, s: int = 1, e: int = 0) -> "ReplicationScheme":
+    return ReplicationScheme(ReplicationConfig(k=k, s=s, e=e))
+
+
+class ReplicationScheme(RedundancyScheme):
+    """Proactive replication: query q's replicas live on worker streams
+    ``q*R .. q*R+R-1``.  Straggler recovery picks the first available
+    replica; Byzantine recovery takes the coordinate-wise median over
+    replicas (robust to E < R/2 corruptions) — the paper's
+    "replication attains base accuracy at (2E+1)x overhead" baseline."""
+
+    name = "replication"
+
+    @property
+    def replicas(self) -> int:
+        return self.config.replicas
+
+    def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
+        return jnp.repeat(grouped, self.replicas, axis=1)
+
+    def decode(self, outputs: jnp.ndarray, avail: jnp.ndarray, *,
+               locate: Optional[bool] = None) -> jnp.ndarray:
+        from repro.core.replication import recover_from_replicas
+        del locate
+        g = outputs.shape[0]
+        r = self.replicas
+        per = outputs.reshape(g * self.k, r, *outputs.shape[2:])
+        avail = jnp.asarray(avail, jnp.float32)
+        am = jnp.broadcast_to(avail, (g, self.num_workers)).reshape(
+            g * self.k, r)
+        return recover_from_replicas(per, am, self.e)
+
+
+# ------------------------------------------------------------------ parm
+
+@dataclasses.dataclass(frozen=True)
+class ParMConfig:
+    """ParM (Kosaian et al., SOSP'19): K data workers + 1 learned-parity
+    worker per group; tolerates exactly one unavailable data worker."""
+
+    k: int
+    s: int = 1
+    e: int = 0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"need K >= 1, got {self.k}")
+        if self.s != 1:
+            raise ValueError(f"ParM tolerates exactly S=1 straggler per "
+                             f"group, got s={self.s}")
+        if self.e != 0:
+            raise ValueError("ParM has no Byzantine recovery (e must "
+                             f"be 0, got {self.e})")
+
+    @property
+    def num_workers(self) -> int:
+        return self.k + 1
+
+    @property
+    def wait_for(self) -> int:
+        return self.k
+
+    @property
+    def decode_quorum(self) -> int:
+        return self.k
+
+
+@register_scheme("parm")
+def _make_parm(k: int, s: int = 1, e: int = 0, *,
+               parity_fn: Optional[Callable] = None) -> "ParMScheme":
+    return ParMScheme(ParMConfig(k=k, s=s, e=e), parity_fn=parity_fn)
+
+
+class ParMScheme(RedundancyScheme):
+    """ParM: parity query = sum of the group; parity worker runs the
+    *learned* parity model f_P with f_P(sum X) ~ sum f(X); one missing
+    data prediction is reconstructed as parity - sum(survivors).
+
+    ``parity_fn`` wraps the trained parity model (``core.parity`` /
+    ``models.classifier.train_parity_model``).  When omitted the parity
+    stream runs the hosted model itself — exact only for linear models,
+    and otherwise a live demonstration of ParM's limitation: f_P must be
+    retrained per hosted model, which is what ApproxIFER removes.
+    """
+
+    name = "parm"
+
+    def __init__(self, config: ParMConfig,
+                 parity_fn: Optional[Callable] = None):
+        super().__init__(config)
+        self.parity_fn = parity_fn
+
+    def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
+        parity = jnp.sum(grouped, axis=1, keepdims=True)
+        return jnp.concatenate([grouped, parity], axis=1)
+
+    def forward(self, predict_fn, coded: jnp.ndarray) -> jnp.ndarray:
+        k = self.k
+        g = coded.shape[0]
+        data = coded[:, :k].reshape(g * k, *coded.shape[2:])
+        data_preds = predict_fn(data)
+        fp = self.parity_fn if self.parity_fn is not None else predict_fn
+        parity_preds = fp(coded[:, k])
+        data_preds = data_preds.reshape(g, k, *data_preds.shape[1:])
+        return jnp.concatenate([data_preds, parity_preds[:, None]], axis=1)
+
+    def decode(self, outputs: jnp.ndarray, avail: jnp.ndarray, *,
+               locate: Optional[bool] = None) -> jnp.ndarray:
+        del locate
+        k = self.k
+        g = outputs.shape[0]
+        avail = jnp.asarray(avail, outputs.dtype)
+        avail2d = jnp.broadcast_to(avail, (g, k + 1))
+        extra = (1,) * (outputs.ndim - 2)
+        ad = avail2d[:, :k].reshape(g, k, *extra)       # data availability
+        ap = avail2d[:, k].reshape(g, *extra)           # parity availability
+        data, parity = outputs[:, :k], outputs[:, k]
+        survivors = jnp.sum(data * ad, axis=1)
+        recon = (parity - survivors)[:, None] * ap[:, None]
+        out = data * ad + (1.0 - ad) * recon
+        return out.reshape(g * k, *outputs.shape[2:])

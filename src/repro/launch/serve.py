@@ -12,11 +12,21 @@ workers' logits at completion time; the vote-gated locator excludes
 them, reputation accumulates, and (with ``--quarantine``) repeat
 offenders stop being dispatched to until their probation expires.
 
+Any registered redundancy scheme serves through the same event loop
+(``--scheme berrut|parm|replication|uncoded``, DESIGN.md §9): "berrut"
+(default) drives the jitted autoregressive coded-LLM path; the other
+schemes serve single-shot next-token prediction over the model's
+embedding space via ``EngineExecutor`` — ParM parity queries are sums of
+embeddings, replication copies them, and the decode recovers the
+straggled slots per scheme.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --k 4 --s 1 --steps 8
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --k 4 --e 1 --attack colluding --attack-rate 0.5 \
       --quarantine
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 16 --k 4 --scheme replication
 """
 
 from __future__ import annotations
@@ -28,11 +38,12 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core.berrut import CodingConfig
-from repro.models import init_params
+from repro.core.scheme import get_scheme, scheme_names
+from repro.models import embed_inputs, init_params
+from repro.models import predict_fn as make_predict_fn
 from repro.serving import (AdversaryConfig, CodedLLMExecutor, CodedScheduler,
-                           LatencyModel, QuarantineConfig, SchedulerConfig,
-                           percentile_table)
+                           EngineExecutor, LatencyModel, QuarantineConfig,
+                           SchedulerConfig, percentile_table)
 
 
 def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
@@ -41,42 +52,76 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         groups_per_batch: int = 2, slo_ms: float | None = None,
         attack: str = "persistent", attack_rate: float = 1.0,
         attack_placement: str = "random", quarantine: bool = False,
-        probation_ms: float = 200.0):
+        probation_ms: float = 200.0, scheme: str = "berrut"):
     cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
-    coding = CodingConfig(k=k, s=s, e=e)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(seed)
 
+    schm = get_scheme(scheme, k=k, s=s, e=e)
+    coding = getattr(schm, "coding", None)      # BerrutScheme only
+
     print(f"serving {requests} requests at {rate_rps:.0f} req/s as groups "
-          f"of K={k} x {coding.num_workers} coded streams "
-          f"(overhead {coding.overhead:.2f}x, replication would need "
-          f"{(s + 1) * k if e == 0 else (2 * e + 1) * k} workers/group)")
-    if e:
+          f"of K={k} x {schm.num_workers} {scheme} worker streams "
+          f"(overhead {schm.overhead:.2f}x; replication would need "
+          f"{(s + 1) * k if e == 0 else (2 * e + 1) * k} workers/group, "
+          f"uncoded {k})")
+    if e and coding is not None:
         print(f"adaptive wait-for {coding.decode_quorum} of "
               f"{coding.num_workers} (locator quorum K+2E; paper offline "
               f"wait_for {coding.wait_for}), attack={attack} "
               f"rate={attack_rate} sigma={byz_sigma} "
               f"quarantine={'on' if quarantine else 'off'}")
+    if scheme == "parm":
+        print("parm: parity stream runs the hosted model on summed "
+              "embeddings (no per-model distilled parity network here — "
+              "exactly the retraining cost ApproxIFER removes)")
 
     latency_model = LatencyModel()
-    executor = CodedLLMExecutor(cfg, coding, params, steps=steps,
-                                max_len=prompt_len + steps + 2, seed=seed)
+    token_prompts = [rng.randint(0, cfg.vocab_size,
+                                 (prompt_len,)).astype(np.int32)
+                     for _ in range(requests)]
+    if scheme == "berrut":
+        # jitted autoregressive coded-LLM path: payloads are token
+        # prompts, every decode round is a coded dispatch
+        executor = CodedLLMExecutor(cfg, coding, params, steps=steps,
+                                    max_len=prompt_len + steps + 2,
+                                    seed=seed)
+        payloads = token_prompts
+    else:
+        # scheme-generic single-shot path: payloads are residual-stream
+        # embeddings (ParM's parity query is a SUM of queries, which is
+        # only meaningful in a continuous input space), one next-token
+        # prediction per request
+        f = jax.jit(make_predict_fn(cfg, params))
+        emb = embed_inputs(cfg, params,
+                           {"tokens": jax.numpy.asarray(
+                               np.stack(token_prompts))})
+        payloads = [np.asarray(emb[i]) for i in range(requests)]
+        executor = EngineExecutor(f, schm)
+    # num_adversaries comes from the CLI --e, NOT scheme.e: schemes that
+    # tolerate no Byzantine workers (uncoded) would otherwise silently
+    # zero out the compromised set and the "defenseless baseline under
+    # attack" run would measure an unattacked system.
     adversary = (AdversaryConfig(kind=attack, attack_rate=attack_rate,
-                                 sigma=byz_sigma,
+                                 sigma=byz_sigma, num_adversaries=e,
                                  placement=attack_placement, seed=seed)
                  if e else None)
+    # Quarantine needs locate verdicts to act on: schemes without an
+    # error locator (replication median, uncoded) never produce any, so
+    # the policy would run dead — refuse silently-inactive flags.
+    if quarantine and e and not schm.has_locator:
+        print(f"warning: --quarantine is inactive for scheme "
+              f"{schm.name!r} (no error locator feeds the reputation "
+              f"policy); ignoring")
+        quarantine = False
     sched = CodedScheduler(
-        SchedulerConfig(coding=coding, groups_per_batch=groups_per_batch,
+        SchedulerConfig(scheme=schm, groups_per_batch=groups_per_batch,
                         flush_deadline_ms=flush_deadline_ms, slo_ms=slo_ms,
                         seed=seed, adversary=adversary,
                         quarantine=(QuarantineConfig(
                             probation_ms=probation_ms)
                             if quarantine and e else None)),
         latency_model, executor)
-
-    payloads = [rng.randint(0, cfg.vocab_size,
-                            (prompt_len,)).astype(np.int32)
-                for _ in range(requests)]
 
     t0 = time.time()
     # arrivals come from the scheduler's own Poisson stream, which is
@@ -94,7 +139,13 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
     print(f"uncoded wait-for-all worker p99 would be {none_p99:.1f}ms")
 
     uids = sorted(sched.results)
-    toks = np.stack([sched.results[u] for u in uids])
+    outs = np.stack([sched.results[u] for u in uids])
+    if scheme == "berrut":
+        toks = outs
+    else:
+        # scheme-generic path served last-position logits: report the
+        # greedy next token per request
+        toks = np.argmax(outs, -1)[:, None]
     for r in uids[:4]:
         print(f"  request {r}: {toks[r].tolist()}")
     return toks
@@ -111,6 +162,11 @@ def main():
     ap.add_argument("--e", type=int, default=0)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--scheme", default="berrut", choices=scheme_names(),
+                    help="redundancy scheme served through the event loop "
+                         "(berrut drives the autoregressive coded-LLM "
+                         "path; others serve next-token prediction over "
+                         "embeddings)")
     ap.add_argument("--byz-sigma", type=float, default=50.0)
     ap.add_argument("--attack", default="persistent",
                     choices=["persistent", "intermittent", "colluding"],
@@ -140,7 +196,8 @@ def main():
         slo_ms=args.slo_ms, attack=args.attack,
         attack_rate=args.attack_rate,
         attack_placement=args.attack_placement,
-        quarantine=args.quarantine, probation_ms=args.probation_ms)
+        quarantine=args.quarantine, probation_ms=args.probation_ms,
+        scheme=args.scheme)
 
 
 if __name__ == "__main__":

@@ -21,8 +21,6 @@ from typing import Any, List, Optional
 
 import numpy as np
 
-from repro.core.berrut import CodingConfig
-
 
 @dataclasses.dataclass
 class Request:
@@ -42,9 +40,16 @@ class BatchPlan:
 
 
 class GroupBatcher:
-    def __init__(self, coding: CodingConfig, groups_per_batch: int = 1,
+    """Groups requests into batches of ``groups_per_batch`` groups of K.
+
+    ``scheme`` is anything exposing the group size ``k`` — a
+    ``RedundancyScheme`` or a bare ``CodingConfig``; the batcher is
+    redundancy-agnostic (it shapes *queries*, not worker streams).
+    """
+
+    def __init__(self, scheme, groups_per_batch: int = 1,
                  flush_deadline_ms: Optional[float] = None):
-        self.coding = coding
+        self.scheme = scheme
         self.groups = groups_per_batch
         self.flush_deadline_ms = flush_deadline_ms
         self._pending: List[Request] = []
@@ -52,7 +57,7 @@ class GroupBatcher:
 
     @property
     def batch_size(self) -> int:
-        return self.groups * self.coding.k
+        return self.groups * self.scheme.k
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -97,7 +102,7 @@ class GroupBatcher:
         take = self._pending[:n]
         self._pending = self._pending[n:]
         if len(take) < n and pad == "group":
-            n = math.ceil(len(take) / self.coding.k) * self.coding.k
+            n = math.ceil(len(take) / self.scheme.k) * self.scheme.k
         valid = np.ones((n,), bool)
         while len(take) < n:               # pad by repeating the last
             valid[len(take)] = False

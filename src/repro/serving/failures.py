@@ -64,7 +64,7 @@ def worst_case_straggler_mask(coding: CodingConfig) -> jnp.ndarray:
     return jnp.asarray(mask)
 
 
-def worst_case_byzantine_placement(coding: CodingConfig,
+def worst_case_byzantine_placement(coding,
                                    num_errors: int | None = None
                                    ) -> np.ndarray:
     """Worker indices where the locator's conditioning is worst.
@@ -157,9 +157,10 @@ class RoundAttack:
 class Adversary:
     """Stateful adversary: a fixed compromised worker set + per-dispatch
     behavior.  ``next_round()`` is called once per coded dispatch by the
-    scheduler's event loop."""
+    scheduler's event loop.  ``coding`` is anything exposing
+    ``num_workers`` and ``e`` — a CodingConfig or a RedundancyScheme."""
 
-    def __init__(self, coding: CodingConfig, config: AdversaryConfig):
+    def __init__(self, coding, config: AdversaryConfig):
         self.coding = coding
         self.config = config
         self._rng = np.random.RandomState(config.seed)
@@ -197,7 +198,7 @@ class Adversary:
                            collude=cfg.kind == "colluding")
 
 
-def make_adversary(coding: CodingConfig,
+def make_adversary(coding,
                    config: Optional[AdversaryConfig]) -> Optional[Adversary]:
     if config is None or config.kind == "none":
         return None

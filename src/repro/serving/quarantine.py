@@ -24,8 +24,6 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.berrut import CodingConfig
-
 
 @dataclasses.dataclass(frozen=True)
 class QuarantineConfig:
@@ -62,7 +60,9 @@ class QuarantineEvent:
 class WorkerReputation:
     """Accumulates Algorithm-2 verdicts and drives the quarantine policy."""
 
-    def __init__(self, coding: CodingConfig, config: QuarantineConfig):
+    def __init__(self, coding, config: QuarantineConfig):
+        # ``coding`` is anything exposing ``num_workers`` and ``e`` — a
+        # CodingConfig or any RedundancyScheme.
         self.coding = coding
         self.config = config
         n = coding.num_workers

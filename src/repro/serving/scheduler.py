@@ -6,6 +6,12 @@ arrive on a Poisson/trace clock into the deadline-flushing
 times from ``LatencyModel``; the decoder fires the moment the fastest
 ``wait_for`` coded workers land, deriving the straggler mask from the
 event clock (``mask_from_completion_times``) instead of a hand-fed mask.
+
+The event loop is redundancy-agnostic (DESIGN.md §9): it is written
+against the ``RedundancyScheme`` protocol (``core.scheme``), so the same
+scheduler serves Berrut-coded, ParM, replicated, and uncoded traffic —
+worker-pool width, wait-for quorum, masks, and reputation/quarantine all
+key off ``scheme.plan``.
 An optional speculative path early-decodes at a latency SLO from whatever
 workers have landed, then corrects when the full quorum arrives.
 
@@ -44,9 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.berrut import CodingConfig
-from repro.core.engine import (decode_coded_preds, encode_groups,
-                               group_queries, locate_and_decode,
-                               mask_from_completion_times)
+from repro.core.engine import group_queries, mask_from_completion_times
+from repro.core.scheme import RedundancyScheme, as_scheme
 from repro.serving.batcher import BatchPlan, GroupBatcher
 from repro.serving.failures import (AdversaryConfig, RoundAttack,
                                     corrupt_coded_preds, make_adversary)
@@ -72,14 +77,22 @@ def poisson_arrivals(n: int, rate_rps: float, seed: int = 0,
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Knobs of the serving runtime."""
+    """Knobs of the serving runtime.
 
-    coding: CodingConfig
+    The redundancy scheme comes from ``scheme`` (any registered
+    ``RedundancyScheme``) or, for the pre-protocol API, from ``coding``
+    (a bare ``CodingConfig``, normalized to ``BerrutScheme``).  Exactly
+    the executor's scheme must be described here; when the executor
+    carries its own ``scheme`` attribute that one wins.
+    """
+
+    coding: Optional[CodingConfig] = None
+    scheme: Optional[RedundancyScheme] = None
     groups_per_batch: int = 1
     flush_deadline_ms: Optional[float] = 2.0   # None: only full batches
     slo_ms: Optional[float] = None             # speculative decode trigger
     seed: int = 0                              # worker-latency stream
-    # Adaptive wait-for; None -> coding.decode_quorum (K with E = 0, the
+    # Adaptive wait-for; None -> scheme.decode_quorum (K with E = 0, the
     # locator quorum K+2E with E > 0 — tighter than the paper's offline
     # 2(K+E), see CodingConfig.decode_quorum).
     wait_for: Optional[int] = None
@@ -109,6 +122,7 @@ class InflightBatch:
     bid: int
     plan: BatchPlan
     queries: Any                       # stacked payloads handed to executor
+    dispatch_plan: Any = None          # scheme.plan(...) for this batch
     handle: Any = None                 # executor state
     dispatch_ms: float = 0.0
     round_masks: List[np.ndarray] = dataclasses.field(default_factory=list)
@@ -136,32 +150,35 @@ class InflightBatch:
 
 
 class EngineExecutor:
-    """Drives the pure coded-inference path behind the event loop.
+    """Drives any ``RedundancyScheme`` behind the event loop.
 
-    ``dispatch`` runs encode + the hosted model over the coded streams
-    (the work the N+1 workers do); ``decode`` applies the event-derived
-    mask via the same jitted pipeline ``coded_inference`` uses — plain
-    ``decode_coded_preds`` with E = 0, the single ``locate_and_decode``
-    program with E > 0 — so outputs match it bit for bit.  The round's
-    ``RoundAttack`` corrupts the coded predictions at decode (completion)
-    time, before the locator sees them.
+    ``dispatch`` runs ``scheme.encode`` + ``scheme.forward`` over the
+    worker streams (the work the W workers do); ``decode`` applies the
+    event-derived mask via ``scheme.decode`` / ``scheme.locate``.  For
+    ``BerrutScheme`` that is the same jitted pipeline ``coded_inference``
+    uses — plain masked decode with E = 0, the single
+    ``locate_and_decode`` program with E > 0 — so outputs match it bit
+    for bit.  The round's ``RoundAttack`` corrupts the worker outputs at
+    decode (completion) time, before any locator sees them.
+
+    Accepts a ``RedundancyScheme`` or (pre-protocol API) a bare
+    ``CodingConfig``, which normalizes to ``BerrutScheme``.
     """
 
     rounds = 1
     supports_speculation = True
 
-    def __init__(self, predict_fn, coding: CodingConfig):
+    def __init__(self, predict_fn, scheme):
         self.predict_fn = predict_fn
-        self.coding = coding
+        self.scheme = as_scheme(scheme)
+        # legacy alias: the Berrut CodingConfig, when this is one
+        self.coding = getattr(self.scheme, "coding", None)
 
     def dispatch(self, queries) -> jnp.ndarray:
-        cfg = self.coding
+        scheme = self.scheme
         q = jnp.asarray(queries)
-        coded = encode_groups(cfg, group_queries(q, cfg.k))
-        flat = coded.reshape(-1, *coded.shape[2:])
-        preds = self.predict_fn(flat)
-        return preds.reshape(coded.shape[0], cfg.num_workers,
-                             *preds.shape[1:])
+        coded = scheme.encode(group_queries(q, scheme.k))
+        return scheme.forward(self.predict_fn, coded)
 
     def step(self, handle, round_idx: int, mask: np.ndarray,
              attack: Optional[RoundAttack] = None):
@@ -170,22 +187,20 @@ class EngineExecutor:
     def decode(self, handle, mask: np.ndarray,
                attack: Optional[RoundAttack] = None
                ) -> Tuple[np.ndarray, Optional[LocateReport]]:
-        cfg = self.coding
+        scheme = self.scheme
         preds = corrupt_coded_preds(handle, attack)
         avail = jnp.asarray(mask, preds.dtype)
-        # E-aware decode: below the K+2E locator quorum (speculative
-        # early decodes) the BW system is hopeless — decode plainly and
-        # let the full decode correct; at or above it, run the single
-        # jitted locate -> exclude -> decode program.
-        if cfg.e > 0 and int(np.sum(mask)) >= cfg.decode_quorum:
-            decoded, located, votes, masks = locate_and_decode(
-                cfg, preds, avail)
+        # Locator-aware decode: below the scheme's decode quorum
+        # (speculative early decodes) error location is hopeless —
+        # decode plainly and let the full decode correct; at or above
+        # it, run the scheme's locate -> exclude -> decode pipeline.
+        if scheme.has_locator and int(np.sum(mask)) >= scheme.decode_quorum:
+            decoded, located, votes, masks = scheme.locate(preds, avail)
             report = LocateReport(located=np.asarray(located),
                                   votes=np.asarray(votes),
                                   masks=np.asarray(masks))
             return np.asarray(decoded), report
-        return np.asarray(
-            decode_coded_preds(cfg, preds, avail, locate=False)), None
+        return np.asarray(scheme.decode(preds, avail, locate=False)), None
 
 
 class CodedLLMExecutor:
@@ -205,10 +220,17 @@ class CodedLLMExecutor:
 
     supports_speculation = False
 
-    def __init__(self, model_cfg, coding: CodingConfig, params, steps: int,
+    def __init__(self, model_cfg, coding, params, steps: int,
                  max_len: int, seed: int = 0):
+        from repro.core.scheme import BerrutScheme
         from repro.serving.coded_serving import (coded_decode_step,
                                                  coded_prefill)
+        self.scheme = as_scheme(coding)
+        if not isinstance(self.scheme, BerrutScheme):
+            raise TypeError("CodedLLMExecutor drives the jitted Berrut "
+                            "coded LLM steps; use EngineExecutor for "
+                            f"scheme {self.scheme.name!r}")
+        coding = self.scheme.coding
         self.coding = coding
         self.params = params
         self.rounds = 1 + steps
@@ -286,21 +308,37 @@ class CodedScheduler:
         self.config = config
         self.latency_model = latency_model
         self.executor = executor
-        coding = config.coding
+        declared = None
+        if config.scheme is not None:
+            declared = config.scheme
+        elif config.coding is not None:
+            declared = as_scheme(config.coding)
+        scheme = getattr(executor, "scheme", None)
+        if scheme is None:
+            if declared is None:
+                raise ValueError("SchedulerConfig needs a scheme or "
+                                 "coding when the executor carries none")
+            scheme = declared
+        elif declared is not None and declared.config != scheme.config:
+            raise ValueError(
+                f"SchedulerConfig declares scheme {declared.name!r} "
+                f"({declared.config}) but the executor runs "
+                f"{scheme.name!r} ({scheme.config})")
+        self.scheme = scheme
         self.batcher = GroupBatcher(
-            coding, groups_per_batch=config.groups_per_batch,
+            scheme, groups_per_batch=config.groups_per_batch,
             flush_deadline_ms=config.flush_deadline_ms)
         self.metrics = ServingMetrics(slo_ms=config.slo_ms)
         self.batches: List[InflightBatch] = []
         self.results: Dict[int, np.ndarray] = {}
         self.spec_results: Dict[int, np.ndarray] = {}
-        self._wait_for = (coding.decode_quorum if config.wait_for is None
+        self._wait_for = (scheme.decode_quorum if config.wait_for is None
                           else config.wait_for)
-        if not 1 <= self._wait_for <= coding.num_workers:
+        if not 1 <= self._wait_for <= scheme.num_workers:
             raise ValueError(f"wait_for={self._wait_for} out of range for "
-                             f"{coding.num_workers} workers")
-        self.adversary = make_adversary(coding, config.adversary)
-        self.reputation = (WorkerReputation(coding, config.quarantine)
+                             f"{scheme.num_workers} workers")
+        self.adversary = make_adversary(scheme, config.adversary)
+        self.reputation = (WorkerReputation(scheme, config.quarantine)
                            if config.quarantine is not None else None)
         # worker latencies and (fallback) arrivals must be INDEPENDENT
         # streams: derive distinct sub-seeds instead of reusing
@@ -380,6 +418,8 @@ class CodedScheduler:
             return
         batch = InflightBatch(bid=next(self._bid), plan=plan,
                               queries=self.batcher.stack_payloads(plan),
+                              dispatch_plan=self.scheme.plan(
+                                  len(plan.requests) // self.scheme.k),
                               dispatch_ms=now, deadline_flushed=flushed)
         batch.handle = self.executor.dispatch(batch.queries)
         self.batches.append(batch)
@@ -392,8 +432,8 @@ class CodedScheduler:
                      round_idx: int) -> None:
         """Sample this round's worker completion times, the adversary's
         move, and schedule the adaptive wait-for decode trigger."""
-        coding = self.config.coding
-        times = self.latency_model.sample(self._rng, coding.num_workers)
+        plan = batch.dispatch_plan
+        times = self.latency_model.sample(self._rng, plan.num_workers)
         if self.reputation is not None:
             # quarantined workers are simply not dispatched to: their
             # results never land, so the wait-for selection skips them
@@ -402,7 +442,7 @@ class CodedScheduler:
             wait = min(self._wait_for, int(active.sum()))
         else:
             wait = self._wait_for
-        mask, trigger = mask_from_completion_times(coding, times,
+        mask, trigger = mask_from_completion_times(plan, times,
                                                    wait_for=wait)
         attack = (self.adversary.next_round()
                   if self.adversary is not None else None)

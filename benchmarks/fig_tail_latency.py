@@ -11,6 +11,12 @@ Two views of the same claim:
    arrival, deadline batching, coded dispatch, adaptive wait-for decode —
    so the measured per-REQUEST tail includes queueing and batching, not
    just the isolated batch completion time.
+
+3. Continuous batching (``--continuous``, DESIGN.md §10): the jitted
+   coded-LLM slot pool serves the SAME Poisson trace with mixed
+   generation lengths twice — run-to-completion admission (the
+   batch-scoped baseline) vs continuous admission — at an equal worker
+   pool, reporting throughput, TTFT, and tail latency for both.
 """
 
 from __future__ import annotations
@@ -21,12 +27,20 @@ import numpy as np
 
 from benchmarks import common
 from repro.core.berrut import CodingConfig
+from repro.serving.continuous import (ContinuousConfig,
+                                      ContinuousLLMExecutor,
+                                      ContinuousScheduler)
 from repro.serving.latency import LatencyModel, percentile_table
 from repro.serving.scheduler import (CodedScheduler, EngineExecutor,
                                      SchedulerConfig, poisson_arrivals)
 
 SCHED_REQUESTS = common.scaled(4000, 400)
 SCHED_RATE_RPS = 20_000.0
+CONT_REQUESTS = common.scaled(96, 24)
+CONT_RATE_RPS = 3000.0
+CONT_POOL_GROUPS = 2
+CONT_K, CONT_S = 2, 1
+CONT_PROMPT_LEN, CONT_MAX_STEPS = 8, 6
 
 
 def _closed_loop(model: LatencyModel, k: int, s: int,
@@ -45,6 +59,54 @@ def _closed_loop(model: LatencyModel, k: int, s: int,
                 for _ in range(SCHED_REQUESTS)]
     arrivals = poisson_arrivals(SCHED_REQUESTS, SCHED_RATE_RPS, seed=1)
     return sched.run(payloads, arrivals)
+
+
+def continuous_faceoff(emit=common.emit):
+    """Run-to-completion vs continuous admission on one trace.
+
+    Same reduced LLM, same fixed slot pool (== equal worker pool: the
+    N+1 coded streams of ``CONT_POOL_GROUPS`` group slots), same Poisson
+    arrivals, same mixed per-request generation budgets — the ONLY
+    difference is whether freed slots host queued groups mid-flight.
+    """
+    from repro import configs
+    from repro.models import init_params
+
+    cfg = configs.get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    coding = CodingConfig(k=CONT_K, s=CONT_S)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           (CONT_PROMPT_LEN,)).astype(np.int32)
+               for _ in range(CONT_REQUESTS)]
+    budgets = rng.randint(1, CONT_MAX_STEPS + 1, size=CONT_REQUESTS)
+    arrivals = poisson_arrivals(CONT_REQUESTS, CONT_RATE_RPS, seed=1)
+    out = {}
+    for mode in ("run_to_completion", "continuous"):
+        executor = ContinuousLLMExecutor(
+            cfg, coding, params, pool_groups=CONT_POOL_GROUPS,
+            max_len=CONT_PROMPT_LEN + CONT_MAX_STEPS + 2)
+        sched = ContinuousScheduler(
+            ContinuousConfig(coding=coding, pool_groups=CONT_POOL_GROUPS,
+                             flush_deadline_ms=4.0, seed=0, mode=mode,
+                             max_new_tokens=CONT_MAX_STEPS),
+            LatencyModel(), executor)
+        metrics = sched.run(prompts, arrivals, max_new_tokens=budgets)
+        summ = metrics.summary()
+        out[mode] = summ
+        emit(f"fig_tail_latency/{mode}", 0.0,
+             f"requests={metrics.count};"
+             f"throughput={summ['throughput_rps']:.1f}rps;"
+             f"tokens_per_s={summ['tokens_per_s']:.1f};"
+             f"p50_ttft={summ['p50_ttft_ms']:.1f}ms;"
+             f"p99={summ['p99_ms']:.1f}ms;rounds={summ['rounds']:.0f}")
+    speedup = (out["continuous"]["throughput_rps"]
+               / out["run_to_completion"]["throughput_rps"])
+    ttft_ratio = (out["continuous"]["p50_ttft_ms"]
+                  / out["run_to_completion"]["p50_ttft_ms"])
+    emit("fig_tail_latency/continuous_speedup", 0.0,
+         f"throughput_x={speedup:.2f};ttft_ratio={ttft_ratio:.2f}")
+    return out
 
 
 def run(emit=common.emit):
@@ -72,4 +134,15 @@ def run(emit=common.emit):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--continuous", action="store_true",
+                    help="run ONLY the continuous-batching vs "
+                         "run-to-completion slot-pool faceoff (the "
+                         "default tail-latency views are covered by "
+                         "benchmarks.run)")
+    args = ap.parse_args()
+    if args.continuous:
+        continuous_faceoff()
+    else:
+        run()

@@ -15,6 +15,7 @@ corrupted-decode rate, quarantine events) are reported against the
 uncoded wait-for-all baseline.
 
   PYTHONPATH=src python examples/serve_coded_llm.py
+  PYTHONPATH=src python examples/serve_coded_llm.py --continuous
   PYTHONPATH=src python examples/serve_coded_llm.py --e 1 --steps 4
   PYTHONPATH=src python examples/serve_coded_llm.py --e 1 \
       --attack colluding --attack-rate 0.5 --quarantine
@@ -24,6 +25,11 @@ uncoded wait-for-all baseline.
 Any registered redundancy scheme (--scheme berrut|parm|replication|
 uncoded) serves through the same event loop; non-Berrut schemes serve
 single-shot next-token prediction over embeddings (DESIGN.md §9).
+
+--continuous switches the berrut path to continuous batching over a
+fixed coded-KV slot pool (--pool-groups slots, DESIGN.md §10): groups
+join at prefill mid-flight, requests retire at per-request generation
+budgets, and the whole run traces prefill/decode-step exactly once.
 """
 
 import argparse
@@ -43,6 +49,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--scheme", default="berrut", choices=scheme_names(),
                     help="redundancy scheme served through the event loop")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a fixed coded-KV slot "
+                         "pool (berrut only)")
+    ap.add_argument("--pool-groups", type=int, default=4,
+                    help="group-slot capacity of the continuous pool")
     ap.add_argument("--attack", default="persistent",
                     choices=["persistent", "intermittent", "colluding"],
                     help="adversary behavior model (active when --e > 0)")
@@ -69,7 +80,8 @@ def main():
               attack_rate=args.attack_rate,
               attack_placement=args.attack_placement,
               quarantine=args.quarantine, probation_ms=args.probation_ms,
-              scheme=args.scheme)
+              scheme=args.scheme, continuous=args.continuous,
+              pool_groups=args.pool_groups)
 
 
 if __name__ == "__main__":

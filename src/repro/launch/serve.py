@@ -20,8 +20,17 @@ embedding space via ``EngineExecutor`` — ParM parity queries are sums of
 embeddings, replication copies them, and the decode recovers the
 straggled slots per scheme.
 
+With ``--continuous`` the berrut LLM path runs continuous batching over
+a fixed coded-KV slot pool (DESIGN.md §10): ``--pool-groups`` group
+slots host groups that join at prefill mid-flight and retire
+independently at per-request generation budgets (drawn 1..steps so the
+pool genuinely churns); prefill and decode-step trace exactly once for
+the whole run, partial flushes included.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --k 4 --s 1 --steps 8
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 32 --k 4 --steps 8 --continuous --pool-groups 4
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --k 4 --e 1 --attack colluding --attack-rate 0.5 \
       --quarantine
@@ -42,8 +51,10 @@ from repro.core.scheme import get_scheme, scheme_names
 from repro.models import embed_inputs, init_params
 from repro.models import predict_fn as make_predict_fn
 from repro.serving import (AdversaryConfig, CodedLLMExecutor, CodedScheduler,
-                           EngineExecutor, LatencyModel, QuarantineConfig,
-                           SchedulerConfig, percentile_table)
+                           ContinuousConfig, ContinuousLLMExecutor,
+                           ContinuousScheduler, EngineExecutor, LatencyModel,
+                           QuarantineConfig, SchedulerConfig,
+                           percentile_table)
 
 
 def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
@@ -52,7 +63,8 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         groups_per_batch: int = 2, slo_ms: float | None = None,
         attack: str = "persistent", attack_rate: float = 1.0,
         attack_placement: str = "random", quarantine: bool = False,
-        probation_ms: float = 200.0, scheme: str = "berrut"):
+        probation_ms: float = 200.0, scheme: str = "berrut",
+        continuous: bool = False, pool_groups: int = 4):
     cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(seed)
@@ -76,11 +88,25 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
               "embeddings (no per-model distilled parity network here — "
               "exactly the retraining cost ApproxIFER removes)")
 
+    if continuous and scheme != "berrut":
+        raise ValueError("--continuous drives the jitted berrut slot-pool "
+                         f"path; scheme {scheme!r} serves single-shot")
     latency_model = LatencyModel()
     token_prompts = [rng.randint(0, cfg.vocab_size,
                                  (prompt_len,)).astype(np.int32)
                      for _ in range(requests)]
-    if scheme == "berrut":
+    budgets = None
+    if scheme == "berrut" and continuous:
+        # slot-pool continuous batching: mixed per-request generation
+        # budgets (1..steps) make groups retire at different rounds, the
+        # churn the fixed pool exists to absorb
+        executor = ContinuousLLMExecutor(
+            cfg, coding, params, pool_groups=pool_groups,
+            max_len=prompt_len + steps + 2,
+            byz_collude=(attack == "colluding" and e > 0))
+        payloads = token_prompts
+        budgets = rng.randint(1, steps + 1, size=requests)
+    elif scheme == "berrut":
         # jitted autoregressive coded-LLM path: payloads are token
         # prompts, every decode round is a coded dispatch
         executor = CodedLLMExecutor(cfg, coding, params, steps=steps,
@@ -114,31 +140,57 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
               f"{schm.name!r} (no error locator feeds the reputation "
               f"policy); ignoring")
         quarantine = False
-    sched = CodedScheduler(
-        SchedulerConfig(scheme=schm, groups_per_batch=groups_per_batch,
-                        flush_deadline_ms=flush_deadline_ms, slo_ms=slo_ms,
-                        seed=seed, adversary=adversary,
-                        quarantine=(QuarantineConfig(
-                            probation_ms=probation_ms)
-                            if quarantine and e else None)),
-        latency_model, executor)
+    quarantine_cfg = (QuarantineConfig(probation_ms=probation_ms)
+                      if quarantine and e else None)
+    if continuous:
+        sched = ContinuousScheduler(
+            ContinuousConfig(coding=coding, pool_groups=pool_groups,
+                             flush_deadline_ms=flush_deadline_ms,
+                             slo_ms=slo_ms, seed=seed, adversary=adversary,
+                             quarantine=quarantine_cfg,
+                             max_new_tokens=steps),
+            latency_model, executor)
+        print(f"continuous batching over {pool_groups} group slots "
+              f"({pool_groups * coding.num_workers} pooled coded streams), "
+              f"per-request budgets 1..{steps}")
+    else:
+        sched = CodedScheduler(
+            SchedulerConfig(scheme=schm, groups_per_batch=groups_per_batch,
+                            flush_deadline_ms=flush_deadline_ms,
+                            slo_ms=slo_ms, seed=seed, adversary=adversary,
+                            quarantine=quarantine_cfg),
+            latency_model, executor)
 
     t0 = time.time()
     # arrivals come from the scheduler's own Poisson stream, which is
     # seeded independently of the worker-latency stream
-    metrics = sched.run(payloads, rate_rps=rate_rps)
+    if continuous:
+        metrics = sched.run(payloads, rate_rps=rate_rps,
+                            max_new_tokens=budgets)
+    else:
+        metrics = sched.run(payloads, rate_rps=rate_rps)
     wall = time.time() - t0
 
     print(metrics.format_table())
-    per_round = np.asarray([w for b in sched.batches for w in b.round_waits])
-    print(f"per-round decode trigger: p50 {np.percentile(per_round, 50):.1f}"
-          f"ms  p99 {np.percentile(per_round, 99):.1f}ms "
-          f"({len(per_round)} coded rounds, wall {wall:.2f}s)")
+    if continuous:
+        print(f"{sched.rounds_run} pool rounds, wall {wall:.2f}s")
+    else:
+        per_round = np.asarray([w for b in sched.batches
+                                for w in b.round_waits])
+        print(f"per-round decode trigger: "
+              f"p50 {np.percentile(per_round, 50):.1f}"
+              f"ms  p99 {np.percentile(per_round, 99):.1f}ms "
+              f"({len(per_round)} coded rounds, wall {wall:.2f}s)")
     none_p99 = percentile_table(latency_model, k, s,
                                 trials=4000)["none"]["p99_ms"]
     print(f"uncoded wait-for-all worker p99 would be {none_p99:.1f}ms")
 
     uids = sorted(sched.results)
+    if continuous:
+        # variable-length generations: requests retire at their budgets
+        for r in uids[:4]:
+            print(f"  request {r}: {sched.results[r].tolist()}")
+        return [sched.results[u] for u in uids]
     outs = np.stack([sched.results[u] for u in uids])
     if scheme == "berrut":
         toks = outs
@@ -167,6 +219,11 @@ def main():
                          "(berrut drives the autoregressive coded-LLM "
                          "path; others serve next-token prediction over "
                          "embeddings)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a fixed coded-KV slot "
+                         "pool (berrut only; DESIGN.md §10)")
+    ap.add_argument("--pool-groups", type=int, default=4,
+                    help="group-slot capacity of the continuous pool")
     ap.add_argument("--byz-sigma", type=float, default=50.0)
     ap.add_argument("--attack", default="persistent",
                     choices=["persistent", "intermittent", "colluding"],
@@ -197,7 +254,8 @@ def main():
         attack_rate=args.attack_rate,
         attack_placement=args.attack_placement,
         quarantine=args.quarantine, probation_ms=args.probation_ms,
-        scheme=args.scheme)
+        scheme=args.scheme, continuous=args.continuous,
+        pool_groups=args.pool_groups)
 
 
 if __name__ == "__main__":

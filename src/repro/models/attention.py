@@ -158,19 +158,36 @@ def attention_prefill(cfg: ModelConfig, p: dict, x: jnp.ndarray,
 def attention_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
                      pos: jnp.ndarray, cache: dict
                      ) -> Tuple[jnp.ndarray, dict]:
-    """One-token decode: x (B, 1, d), pos scalar int32 (shared position).
+    """One-token decode: x (B, 1, d), pos scalar int32 (shared position)
+    or (B,) int32 per-stream positions (slot-pool continuous batching,
+    DESIGN.md §10 — streams admitted at different rounds sit at
+    different cache depths).
 
     Writes the new KV at slot pos % width and attends over valid slots.
     """
-    q, k, v = _qkv(cfg, p, x, pos[None] if pos.ndim == 0 else pos)
+    pos = jnp.asarray(pos, jnp.int32)
     w = cache["k"].shape[1]
-    slot = jnp.mod(pos, w)
-    new_k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], quantize_kv(cfg, k, cache["k"].dtype), slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], quantize_kv(cfg, v, cache["v"].dtype), slot, axis=1)
-    valid = jnp.arange(w)[None, :] <= pos                 # (1, W) -> (B, W)
-    valid = jnp.broadcast_to(valid, (x.shape[0], w))
+    if pos.ndim == 0:
+        q, k, v = _qkv(cfg, p, x, pos[None])
+        slot = jnp.mod(pos, w)
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], quantize_kv(cfg, k, cache["k"].dtype), slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], quantize_kv(cfg, v, cache["v"].dtype), slot, axis=1)
+        valid = jnp.arange(w)[None, :] <= pos             # (1, W) -> (B, W)
+        valid = jnp.broadcast_to(valid, (x.shape[0], w))
+    else:
+        # Per-stream ring slots: a batched scatter replaces the shared
+        # dynamic_update_slice (each stream writes at its own depth,
+        # O(B) traffic — not a full-cache select).
+        q, k, v = _qkv(cfg, p, x, pos[:, None])
+        rows = jnp.arange(x.shape[0])
+        slot = jnp.mod(pos, w)
+        new_k = cache["k"].at[rows, slot].set(
+            quantize_kv(cfg, k, cache["k"].dtype)[:, 0])
+        new_v = cache["v"].at[rows, slot].set(
+            quantize_kv(cfg, v, cache["v"].dtype)[:, 0])
+        valid = jnp.arange(w)[None, :] <= pos[:, None]
     kv_scale = INT8_KV_SCALE if new_k.dtype == jnp.int8 else 0.0
     out = ops.decode_attention(q[:, 0], new_k, new_v, valid,
                                softcap=cfg.attn_logit_softcap,

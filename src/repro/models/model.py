@@ -165,7 +165,9 @@ def prefill(cfg: ModelConfig, params: dict, inputs: dict, caches: list
 def decode_step(cfg: ModelConfig, params: dict, caches: list, inputs: dict,
                 pos: jnp.ndarray) -> Tuple[jnp.ndarray, list]:
     """One decode step.  inputs: {"tokens": (B,1)} or {"embeddings":
-    (B,1,d)}; pos: scalar int32 current position.  -> (logits (B,V), caches).
+    (B,1,d)}; pos: scalar int32 current position, or (B,) int32 per-stream
+    positions (slot-pool continuous batching, DESIGN.md §10).
+    -> (logits (B,V), caches).
     """
     if "embeddings" in inputs:
         x = inputs["embeddings"].astype(_dtype(cfg))

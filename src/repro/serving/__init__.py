@@ -1,5 +1,11 @@
-from repro.serving.coded_serving import (CodedServingState, coded_decode_step,
-                                         coded_prefill, locate)
+from repro.serving.coded_serving import (CodedPoolState, CodedServingState,
+                                         coded_decode_step,
+                                         coded_pool_decode_step,
+                                         coded_pool_prefill, coded_prefill,
+                                         init_pool_state, locate)
+from repro.serving.continuous import (ContinuousConfig,
+                                      ContinuousLLMExecutor,
+                                      ContinuousScheduler, SlotGroup)
 from repro.serving.failures import (Adversary, AdversaryConfig, RoundAttack,
                                     corrupt_coded_preds, make_adversary,
                                     sample_byzantine_mask,
@@ -19,6 +25,9 @@ from repro.serving.scheduler import (CodedLLMExecutor, CodedScheduler,
                                      SchedulerConfig, poisson_arrivals)
 
 __all__ = ["CodedServingState", "coded_prefill", "coded_decode_step",
+           "CodedPoolState", "coded_pool_prefill", "coded_pool_decode_step",
+           "init_pool_state", "ContinuousConfig", "ContinuousLLMExecutor",
+           "ContinuousScheduler", "SlotGroup",
            "locate", "Adversary", "AdversaryConfig", "RoundAttack",
            "corrupt_coded_preds", "make_adversary",
            "sample_straggler_mask", "sample_byzantine_mask",

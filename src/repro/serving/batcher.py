@@ -27,6 +27,10 @@ class Request:
     uid: int
     payload: Any                     # modality inputs for one query
     arrival_ms: float = 0.0          # event-clock submit time
+    # generation budget for autoregressive serving (continuous batching
+    # retires the request at this many generated tokens or at EOS);
+    # None means the scheduler's default applies.
+    max_new_tokens: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -62,9 +66,11 @@ class GroupBatcher:
     def __len__(self) -> int:
         return len(self._pending)
 
-    def submit(self, payload: Any, now: float = 0.0) -> int:
+    def submit(self, payload: Any, now: float = 0.0,
+               max_new_tokens: Optional[int] = None) -> int:
         uid = next(self._uid)
-        self._pending.append(Request(uid, payload, arrival_ms=now))
+        self._pending.append(Request(uid, payload, arrival_ms=now,
+                                     max_new_tokens=max_new_tokens))
         return uid
 
     def ready(self) -> bool:
@@ -107,8 +113,26 @@ class GroupBatcher:
         while len(take) < n:               # pad by repeating the last
             valid[len(take)] = False
             take.append(Request(-1, take[-1].payload,
-                                arrival_ms=take[-1].arrival_ms))
+                                arrival_ms=take[-1].arrival_ms,
+                                max_new_tokens=take[-1].max_new_tokens))
         return BatchPlan(requests=take, valid=valid)
+
+    def take_group(self, flush: bool = False) -> Optional[BatchPlan]:
+        """Admission-queue pop: exactly ONE group of K (or None).
+
+        The continuous slot-pool scheduler admits at group granularity —
+        a full group whenever K requests are pending, or (with ``flush``)
+        a deadline-expired partial group padded to K — independent of
+        ``groups_per_batch``, which shapes the run-to-completion batches.
+        Delegates to ``next_batch`` at a temporary single-group width so
+        the gating/padding logic lives in exactly one place.
+        """
+        saved = self.groups
+        self.groups = 1
+        try:
+            return self.next_batch(flush=flush, pad="group")
+        finally:
+            self.groups = saved
 
     def stack_payloads(self, plan: BatchPlan):
         """Stack per-request payloads into batch arrays.

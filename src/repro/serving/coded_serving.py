@@ -132,6 +132,14 @@ def _decode_logits_per_group(coding: CodingConfig, coded_logits, masks):
     return out.reshape(g * coding.k, v)
 
 
+# Trace-time side effects: incremented once per jit compilation of the
+# coded serving steps (legacy batch-scoped or slot-pool continuous) — the
+# compile-count guards in tests assert a whole serving run traces prefill
+# and decode-step exactly once each.  Outside jit they count calls.
+CODED_PREFILL_TRACES = 0
+CODED_DECODE_STEP_TRACES = 0
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class CodedServingState:
@@ -173,6 +181,8 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     ``with_report`` also the (located, votes) pair of the vote-gated
     locator for reputation tracking.
     """
+    global CODED_PREFILL_TRACES
+    CODED_PREFILL_TRACES += 1
     x = embed_inputs(cfg, params, inputs)                 # (G*K, S, d)
     gk, s, d = x.shape
     g = gk // coding.k
@@ -211,6 +221,8 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
     Returns (decoded logits (G*K, V), new state); with ``with_report``
     also the locator's (located, votes).
     """
+    global CODED_DECODE_STEP_TRACES
+    CODED_DECODE_STEP_TRACES += 1
     from repro.models import layers as _layers
     x = _layers.embed_tokens(cfg, params["embeddings"], tokens)  # (G*K,1,d)
     gk, _, d = x.shape
@@ -225,6 +237,189 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
     logits, report = _finish_round(coding, coded_logits, straggler_mask,
                                    with_report)
     new_state = CodedServingState(caches=caches, pos=state.pos + 1)
+    if with_report:
+        return logits, new_state, report
+    return logits, new_state
+
+
+# --------------------------------------------------------- slot pool (§10)
+#
+# Continuous batching over a fixed-capacity coded-stream slot pool: the
+# jitted program ALWAYS runs pool_groups x (N+1) coded streams.  A group
+# slot is either live (its group decodes every round) or free (its
+# streams compute masked garbage); groups join at prefill mid-flight into
+# free slots, retire independently, and a retired slot's caches are
+# simply overwritten by the next admission's prefill.  Because every
+# shape is pinned to the pool size, deadline-flushed partial batches and
+# mid-flight admissions never change the traced program — prefill and
+# decode-step each compile exactly once per serving run.
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CodedPoolState:
+    """Persistent slot-pool serving state (a pytree).
+
+    ``caches`` hold the coded-stream KV/SSM state of every slot in the
+    pool; ``pos`` is the per-GROUP-slot next cache position (all N+1
+    coded streams of a group advance in lockstep — DESIGN.md §5's
+    stream-owns-its-cache invariant, sliced per slot)."""
+
+    caches: list                   # pool-wide coded-stream caches
+    pos: jnp.ndarray               # (pool_groups,) int32 per-slot position
+
+
+def init_pool_state(cfg: ModelConfig, coding: CodingConfig,
+                    pool_groups: int, max_len: int,
+                    cache_dtype=None) -> CodedPoolState:
+    """Allocate the fixed slot pool: ``pool_groups * (N+1)`` coded-stream
+    caches (padded to the mesh batch product) and zeroed slot positions."""
+    if pool_groups < 1:
+        raise ValueError(f"need pool_groups >= 1, got {pool_groups}")
+    streams = num_padded_streams(coding, pool_groups)
+    dtype = cache_dtype or jnp.dtype(cfg.param_dtype)
+    caches = init_caches(cfg, streams, max_len, dtype=dtype)
+    return CodedPoolState(caches=caches,
+                          pos=jnp.zeros((pool_groups,), jnp.int32))
+
+
+def _stream_mask(coding: CodingConfig, group_mask: jnp.ndarray,
+                 padded_streams: int) -> jnp.ndarray:
+    """(P,) group-slot mask -> (padded_streams,) coded-stream mask.
+
+    Divisibility-padding streams are always 0: they repeat stream 0's
+    content but must never overwrite a live slot's cache."""
+    per = jnp.repeat(group_mask, coding.num_workers)
+    pad = padded_streams - per.shape[0]
+    if pad:
+        per = jnp.concatenate([per, jnp.zeros((pad,), per.dtype)])
+    return per
+
+
+def _merge_caches(old: list, new: list, stream_mask: jnp.ndarray) -> list:
+    """Per-stream select between two identically-shaped cache pytrees.
+
+    Cache leaves are (layers, streams, ...): the stream axis is axis 1
+    (``transformer.init_run_caches`` stacks a leading layer axis)."""
+    def merge(o, n):
+        m = stream_mask.reshape((1, -1) + (1,) * (o.ndim - 2))
+        return jnp.where(m > 0, n, o)
+    return jax.tree.map(merge, old, new)
+
+
+def _finish_pool_round(coding: CodingConfig, coded_logits: jnp.ndarray,
+                       group_mask: jnp.ndarray,
+                       straggler_mask: Optional[jnp.ndarray],
+                       with_report: bool):
+    """``_finish_round`` with the active-slot mask composed in: free
+    slots' streams are excluded from the locator's verdicts (their
+    garbage logits must not feed reputation) and their decoded rows are
+    zeroed so stale slots can never leak a previous group's tokens."""
+    logits, report = _finish_round(coding, coded_logits, straggler_mask,
+                                   with_report=True)
+    located, votes = report
+    live = group_mask > 0                                  # (P,)
+    located = jnp.logical_and(located, live[:, None])
+    votes = votes * live[:, None].astype(votes.dtype)
+    per_query = jnp.repeat(group_mask, coding.k)           # (P*K,)
+    logits = logits * per_query[:, None].astype(logits.dtype)
+    if with_report:
+        return logits, (located, votes)
+    return logits, None
+
+
+def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
+                       state: CodedPoolState, inputs: dict, max_len: int,
+                       admit_mask: jnp.ndarray,
+                       straggler_mask: Optional[jnp.ndarray] = None,
+                       cache_dtype=None,
+                       byz_mask: Optional[jnp.ndarray] = None,
+                       byz_rng: Optional[jax.Array] = None,
+                       byz_sigma: float = 10.0, byz_collude: bool = False,
+                       with_report: bool = False):
+    """Prefill admitted group slots INTO the persistent pool.
+
+    inputs: modality dict with leading batch = pool_groups*K query rows
+    (the pool-wide prompt buffer — rows of non-admitted slots carry
+    stale/padding prompts and are masked out).  ``admit_mask`` is the
+    (pool_groups,) 0/1 mask of slots being admitted this round.  The
+    whole pool shape prefills every call (fixed XLA shapes — this is
+    what makes mid-flight admission trace-free); only admitted slots'
+    caches are merged into the pool, everyone else's state is untouched.
+    Returns (decoded last-token logits (pool_groups*K, V) with
+    non-admitted rows zeroed, new state); with ``with_report`` also the
+    admit-masked (located, votes) locator pair.
+    """
+    global CODED_PREFILL_TRACES
+    CODED_PREFILL_TRACES += 1
+    x = embed_inputs(cfg, params, inputs)                 # (P*K, S, d)
+    gk, s, d = x.shape
+    g = gk // coding.k
+    admit_mask = jnp.asarray(admit_mask, jnp.float32)
+    coded = _code_streams(coding, x.reshape(g, coding.k, s, d))
+    dtype = cache_dtype or jax.tree.leaves(state.caches)[0].dtype
+    fresh = init_caches(cfg, coded.shape[0], max_len, dtype=dtype)
+    coded_logits, fresh = prefill(cfg, params, {"embeddings": coded}, fresh)
+    smask = _stream_mask(coding, admit_mask, coded.shape[0])
+    caches = _merge_caches(state.caches, fresh, smask)
+    new_pos = jnp.where(admit_mask > 0, jnp.asarray(s, jnp.int32),
+                        state.pos)
+    coded_logits = _real_streams(coding, coded_logits, g)
+    if byz_mask is not None and byz_rng is not None:
+        coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
+                                       byz_rng, byz_sigma, byz_collude)
+    logits, report = _finish_pool_round(coding, coded_logits, admit_mask,
+                                        straggler_mask, with_report)
+    new_state = CodedPoolState(caches=caches, pos=new_pos)
+    if with_report:
+        return logits, new_state, report
+    return logits, new_state
+
+
+def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
+                           params: dict, state: CodedPoolState,
+                           tokens: jnp.ndarray, active_mask: jnp.ndarray,
+                           straggler_mask: Optional[jnp.ndarray] = None,
+                           byz_mask: Optional[jnp.ndarray] = None,
+                           byz_rng: Optional[jax.Array] = None,
+                           byz_sigma: float = 10.0,
+                           byz_collude: bool = False,
+                           with_report: bool = False):
+    """One decode round over the WHOLE pool.
+
+    tokens: (pool_groups*K, 1) int32 — the sampled next token of every
+    real query row (free slots carry don't-care tokens).  All pool
+    streams step every round at their own per-slot cache position
+    (``decode_step`` takes the per-stream position vector); only active
+    slots advance ``pos``, so a free slot harmlessly rewrites one cache
+    entry until its next admission overwrites it wholesale.  Returns
+    (decoded logits (pool_groups*K, V) with inactive rows zeroed, new
+    state); with ``with_report`` also the active-masked (located, votes).
+    """
+    global CODED_DECODE_STEP_TRACES
+    CODED_DECODE_STEP_TRACES += 1
+    from repro.models import layers as _layers
+    x = _layers.embed_tokens(cfg, params["embeddings"], tokens)  # (P*K,1,d)
+    gk, _, d = x.shape
+    g = gk // coding.k
+    active_mask = jnp.asarray(active_mask, jnp.float32)
+    coded = _code_streams(coding, x.reshape(g, coding.k, 1, d))
+    pad = coded.shape[0] - g * coding.num_workers
+    stream_pos = jnp.repeat(state.pos, coding.num_workers)
+    if pad:
+        # padding streams duplicate stream 0 — track its position too
+        stream_pos = jnp.concatenate(
+            [stream_pos, jnp.broadcast_to(stream_pos[:1], (pad,))])
+    coded_logits, caches = decode_step(cfg, params, state.caches,
+                                       {"embeddings": coded}, stream_pos)
+    coded_logits = _real_streams(coding, coded_logits, g)
+    if byz_mask is not None and byz_rng is not None:
+        coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
+                                       byz_rng, byz_sigma, byz_collude)
+    logits, report = _finish_pool_round(coding, coded_logits, active_mask,
+                                        straggler_mask, with_report)
+    new_pos = state.pos + (active_mask > 0).astype(jnp.int32)
+    new_state = CodedPoolState(caches=caches, pos=new_pos)
     if with_report:
         return logits, new_state, report
     return logits, new_state

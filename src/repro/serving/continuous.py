@@ -1,0 +1,510 @@
+"""Continuous-batching coded LLM serving over a fixed coded-KV slot pool
+(DESIGN.md §10).
+
+The run-to-completion scheduler (``serving.scheduler``) dispatches a
+batch, decodes it for a fixed number of rounds, and only then touches
+the queue — under real traffic with mixed generation lengths most of
+the worker pool idles on requests that finished early, and a
+deadline-flushed partial batch even changes the jitted shape and
+recompiles.  This module replaces that lifecycle with a persistent
+round loop over a fixed-capacity slot pool:
+
+  * The jitted program ALWAYS runs ``pool_groups x (N+1)`` coded
+    streams (``coded_serving.coded_pool_prefill`` /
+    ``coded_pool_decode_step``); a group slot is live or free, never a
+    different shape.  Prefill and decode-step each trace exactly once
+    per serving run — no recompiles for partial batches, ever.
+  * Groups join at prefill mid-flight: whenever slots are free and a
+    group of K requests is ready (or its flush deadline expired), the
+    next pool round admits it alongside the in-flight groups' decode.
+  * Requests retire independently on per-request EOS /
+    ``max_new_tokens``; a group's slots free when its last request
+    retires, and freed slots are handed to queued groups on the next
+    round.
+
+Every pool round is one coded dispatch: per-worker completion times are
+sampled once, the round fires when the fastest ``wait_for`` coded
+workers land, and the round's straggler mask (and Byzantine attack, if
+an adversary is configured) applies to both the admissions' prefill and
+the actives' decode step.  ``mode="run_to_completion"`` keeps the same
+pool but only admits into an EMPTY pool — the batch-scoped baseline the
+``--continuous`` benchmark compares against at an equal worker pool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.berrut import CodingConfig
+from repro.core.engine import mask_from_completion_times
+from repro.core.scheme import BerrutScheme, as_scheme
+from repro.serving.batcher import GroupBatcher
+from repro.serving.coded_serving import (coded_pool_decode_step,
+                                         coded_pool_prefill,
+                                         init_pool_state)
+from repro.serving.failures import (AdversaryConfig, RoundAttack,
+                                    make_adversary)
+from repro.serving.latency import LatencyModel
+from repro.serving.metrics import RequestRecord, ServingMetrics
+from repro.serving.quarantine import QuarantineConfig, WorkerReputation
+from repro.serving.scheduler import (LocateReport, derive_seed_streams,
+                                     resolve_arrivals, round_ground_truth)
+
+# Event kinds; numeric order breaks timestamp ties (arrivals land before
+# a flush deadline at the same instant, which lands before a round).
+_ARRIVAL, _FLUSH, _ROUND = 0, 1, 2
+
+_MODES = ("continuous", "run_to_completion")
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousConfig:
+    """Knobs of the slot-pool serving runtime."""
+
+    coding: Optional[CodingConfig] = None
+    pool_groups: int = 4               # fixed group-slot capacity
+    flush_deadline_ms: Optional[float] = 2.0
+    slo_ms: Optional[float] = None     # goodput accounting only
+    seed: int = 0
+    wait_for: Optional[int] = None     # None -> scheme.decode_quorum
+    adversary: Optional[AdversaryConfig] = None
+    quarantine: Optional[QuarantineConfig] = None
+    # "continuous": admit into free slots every round (the tentpole);
+    # "run_to_completion": admit only into an EMPTY pool — the
+    # batch-scoped baseline at the same pool/worker budget.
+    mode: str = "continuous"
+    max_new_tokens: int = 8            # default per-request budget
+    eos_token_id: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got "
+                             f"{self.mode!r}")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1, got "
+                             f"{self.max_new_tokens}")
+
+
+@dataclasses.dataclass
+class SlotGroup:
+    """One admitted group of K requests living in a pool slot."""
+
+    gid: int
+    slot: int
+    plan: Any                          # BatchPlan (K requests, valid mask)
+    admit_ms: float
+    budget: np.ndarray                 # (K,) per-request max_new_tokens
+    done: np.ndarray                   # (K,) bool (padding: done at birth)
+    gen: np.ndarray                    # (K,) generated-token counts
+    prefilled: bool = False
+    deadline_flushed: bool = False
+
+
+class ContinuousLLMExecutor:
+    """Drives the jitted slot-pool serving steps behind the round loop.
+
+    Wraps ``coded_pool_prefill`` / ``coded_pool_decode_step`` in TWO jit
+    programs whose shapes are pinned to the pool
+    (``pool_groups * (N+1)`` streams, fixed prompt length): admissions,
+    retirements, deadline-flushed partial groups, and straggler /
+    Byzantine masks are all data, so the whole serving run traces each
+    program exactly once.  Byzantine arguments are normalized to
+    zero-mask / zero-sigma arrays on clean rounds so the pytree
+    structure (and therefore the compiled program) never changes;
+    ``byz_collude`` is the one static — it must match the adversary's
+    behavior model for the run.
+    """
+
+    def __init__(self, model_cfg, coding, params, pool_groups: int,
+                 max_len: int, byz_collude: bool = False):
+        self.scheme = as_scheme(coding)
+        if not isinstance(self.scheme, BerrutScheme):
+            raise TypeError("ContinuousLLMExecutor drives the jitted "
+                            "Berrut slot-pool steps; use EngineExecutor "
+                            f"for scheme {self.scheme.name!r}")
+        coding = self.scheme.coding
+        self.coding = coding
+        self.model_cfg = model_cfg
+        self.params = params
+        self.pool_groups = pool_groups
+        self.max_len = max_len
+        self.byz_collude = byz_collude
+        self._prefill = jax.jit(
+            lambda p, st, t, a, m, bm, br, bs: coded_pool_prefill(
+                model_cfg, coding, p, st, {"tokens": t}, max_len, a,
+                straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
+                byz_collude=byz_collude, with_report=True))
+        self._decode = jax.jit(
+            lambda p, st, t, a, m, bm, br, bs: coded_pool_decode_step(
+                model_cfg, coding, p, st, t, a,
+                straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
+                byz_collude=byz_collude, with_report=True))
+
+    def init_state(self):
+        return init_pool_state(self.model_cfg, self.coding,
+                               self.pool_groups, self.max_len)
+
+    def _byz_args(self, attack: Optional[RoundAttack]):
+        """Constant-structure Byzantine args: a clean round is a
+        zero-mask, zero-sigma attack, NOT a ``None`` (whose different
+        pytree structure would force a second compilation)."""
+        if attack is None or not attack.active:
+            return (jnp.zeros((self.coding.num_workers,), jnp.float32),
+                    jax.random.PRNGKey(0), jnp.asarray(0.0, jnp.float32))
+        if bool(attack.collude) != self.byz_collude:
+            raise ValueError(
+                f"adversary collude={attack.collude} does not match the "
+                f"executor's static byz_collude={self.byz_collude}")
+        return (jnp.asarray(attack.mask, jnp.float32), attack.key,
+                jnp.asarray(attack.sigma, jnp.float32))
+
+    def _report(self, mask: np.ndarray, report) -> Optional[LocateReport]:
+        if self.coding.e == 0:
+            return None
+        located, votes = report
+        g = located.shape[0]
+        located = np.asarray(located)
+        return LocateReport(
+            located=located, votes=np.asarray(votes),
+            masks=np.broadcast_to(mask, (g, len(mask)))
+            * (1.0 - located.astype(np.float32)))
+
+    def prefill(self, state, prompts: np.ndarray, admit_mask: np.ndarray,
+                mask: np.ndarray, attack: Optional[RoundAttack] = None):
+        bm, br, bs = self._byz_args(attack)
+        logits, state, report = self._prefill(
+            self.params, state, jnp.asarray(prompts, jnp.int32),
+            jnp.asarray(admit_mask, jnp.float32),
+            jnp.asarray(mask, jnp.float32), bm, br, bs)
+        return np.asarray(logits), state, self._report(mask, report)
+
+    def decode(self, state, tokens: np.ndarray, active_mask: np.ndarray,
+               mask: np.ndarray, attack: Optional[RoundAttack] = None):
+        bm, br, bs = self._byz_args(attack)
+        logits, state, report = self._decode(
+            self.params, state, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(active_mask, jnp.float32),
+            jnp.asarray(mask, jnp.float32), bm, br, bs)
+        return np.asarray(logits), state, self._report(mask, report)
+
+
+class ContinuousScheduler:
+    """Discrete-event round loop over the fixed coded-KV slot pool.
+
+    ``run`` consumes per-request token prompts plus arrival times (and
+    per-request generation budgets) and returns ``ServingMetrics``;
+    per-request generated-token arrays land in ``results`` (keyed by
+    uid, variable length — requests retire independently).  ``trace``
+    is the golden event log: one tuple per admission / round / request
+    retirement / slot free, in event order, bit-reproducible for a
+    fixed seed.
+    """
+
+    def __init__(self, config: ContinuousConfig,
+                 latency_model: LatencyModel,
+                 executor: ContinuousLLMExecutor):
+        self.config = config
+        self.latency_model = latency_model
+        self.executor = executor
+        scheme = executor.scheme
+        if (config.coding is not None
+                and as_scheme(config.coding).config != scheme.config):
+            raise ValueError(
+                f"ContinuousConfig declares coding {config.coding} but "
+                f"the executor runs {scheme.config}")
+        if config.pool_groups != executor.pool_groups:
+            raise ValueError(
+                f"ContinuousConfig.pool_groups={config.pool_groups} but "
+                f"the executor's pool has {executor.pool_groups} slots")
+        self.scheme = scheme
+        self.pool_groups = executor.pool_groups
+        self.batcher = GroupBatcher(
+            scheme, groups_per_batch=1,
+            flush_deadline_ms=config.flush_deadline_ms)
+        self.metrics = ServingMetrics(slo_ms=config.slo_ms)
+        self.results: Dict[int, np.ndarray] = {}
+        self.groups: List[SlotGroup] = []       # every admitted group
+        self.trace: List[tuple] = []            # golden event log
+        self._wait_for = (scheme.decode_quorum if config.wait_for is None
+                          else config.wait_for)
+        if not 1 <= self._wait_for <= scheme.num_workers:
+            raise ValueError(f"wait_for={self._wait_for} out of range for "
+                             f"{scheme.num_workers} workers")
+        self.adversary = make_adversary(scheme, config.adversary)
+        if (self.adversary is not None
+                and (config.adversary.kind == "colluding")
+                != executor.byz_collude):
+            raise ValueError(
+                "executor byz_collude must be True exactly for the "
+                "colluding adversary (it is jit-static)")
+        self.reputation = (WorkerReputation(scheme, config.quarantine)
+                           if config.quarantine is not None else None)
+        self._rng, self._arrival_seed = derive_seed_streams(config.seed)
+        self._events: list = []
+        self._seq = itertools.count()
+        self._gid = itertools.count()
+        self._arrival_ms: Dict[int, float] = {}
+        self._first_ms: Dict[int, float] = {}
+        self._outs: Dict[int, list] = {}
+        self._now = 0.0
+        self._round_idx = 0
+        self._inflight = False
+        self._force = False
+        self._slots: List[Optional[SlotGroup]] = [None] * self.pool_groups
+        self._free: List[int] = list(range(self.pool_groups))
+        self._state = executor.init_state()
+        self._prompt_buf: Optional[np.ndarray] = None
+        self._token_buf = np.zeros((self.pool_groups * scheme.k, 1),
+                                   np.int32)
+
+    # -- event plumbing --------------------------------------------------
+
+    def _push(self, t: float, kind: int, data: Any) -> None:
+        heapq.heappush(self._events, (t, kind, next(self._seq), data))
+
+    def _occupied(self) -> bool:
+        return any(g is not None for g in self._slots)
+
+    @property
+    def rounds_run(self) -> int:
+        return self._round_idx
+
+    def run(self, payloads: Sequence[np.ndarray],
+            arrival_ms: Optional[Sequence[float]] = None,
+            rate_rps: Optional[float] = None,
+            max_new_tokens: Optional[Any] = None) -> ServingMetrics:
+        """Serve ``payloads`` (uniform-length int32 token prompts).
+
+        ``max_new_tokens``: scalar or per-request sequence of generation
+        budgets (default ``config.max_new_tokens`` for all) — the mixed
+        generation lengths continuous batching exists to exploit.
+        """
+        arrival_ms = resolve_arrivals(len(payloads), arrival_ms, rate_rps,
+                                      self._arrival_seed)
+        if max_new_tokens is None:
+            budgets = [self.config.max_new_tokens] * len(payloads)
+        elif np.ndim(max_new_tokens) == 0:
+            budgets = [int(max_new_tokens)] * len(payloads)
+        else:
+            budgets = [int(b) for b in max_new_tokens]
+            if len(budgets) != len(payloads):
+                raise ValueError("max_new_tokens/payloads length mismatch")
+        if any(b < 1 for b in budgets):
+            raise ValueError("per-request max_new_tokens must be >= 1")
+        shapes = {np.shape(p) for p in payloads}
+        if len(shapes) != 1:
+            raise ValueError(f"prompts must share one fixed shape (the "
+                             f"jitted pool shape), got {sorted(shapes)}")
+        (prompt_len,) = shapes.pop()
+        self._prompt_buf = np.zeros(
+            (self.pool_groups * self.scheme.k, prompt_len), np.int32)
+        for t, payload, budget in zip(arrival_ms, payloads, budgets):
+            self._push(float(t), _ARRIVAL, (payload, budget))
+        while self._events or len(self.batcher) or self._occupied():
+            if not self._events:
+                # arrivals exhausted with no flush deadline configured:
+                # admit the remaining partial group at the current clock
+                self._try_start_round(self._now, force=True)
+                if not self._events:
+                    break
+                continue
+            t, kind, _, data = heapq.heappop(self._events)
+            self._now = max(self._now, t)
+            if kind == _ARRIVAL:
+                self._on_arrival(t, data)
+            elif kind == _FLUSH:
+                self._on_flush(t, data)
+            elif kind == _ROUND:
+                self._on_round(t, data)
+        if self.reputation is not None:
+            counts = self.reputation.counts()
+            self.metrics.quarantine_events = counts["quarantines"]
+            self.metrics.readmissions = counts["readmissions"]
+        return self.metrics
+
+    # -- handlers --------------------------------------------------------
+
+    def _on_arrival(self, t: float, data) -> None:
+        payload, budget = data
+        uid = self.batcher.submit(payload, now=t, max_new_tokens=budget)
+        self._arrival_ms[uid] = t
+        self._outs[uid] = []
+        self._try_start_round(t)
+        if self.batcher.flush_deadline_ms is not None and uid in \
+                self.batcher.pending_uids():
+            self._push(t + self.batcher.flush_deadline_ms, _FLUSH, uid)
+
+    def _on_flush(self, t: float, uid: int) -> None:
+        # if the round loop is spinning, the deadline check happens at
+        # the next round boundary anyway; when idle, this event wakes it
+        if not self._inflight and self.batcher.deadline_expired(t):
+            self._try_start_round(t)
+
+    def _admit(self, now: float) -> List[SlotGroup]:
+        """Move ready (or deadline-expired) groups into free slots."""
+        if (self.config.mode == "run_to_completion" and self._occupied()):
+            return []                   # batch-scoped baseline: drain first
+        admitted: List[SlotGroup] = []
+        k = self.scheme.k
+        while self._free:
+            flush = self._force or self.batcher.deadline_expired(now)
+            plan = self.batcher.take_group(flush=flush)
+            if plan is None:
+                break
+            slot = self._free.pop(0)
+            n_valid = int(plan.valid.sum())
+            group = SlotGroup(
+                gid=next(self._gid), slot=slot, plan=plan, admit_ms=now,
+                budget=np.asarray(
+                    [r.max_new_tokens or self.config.max_new_tokens
+                     for r in plan.requests], np.int64),
+                done=~plan.valid.copy(), gen=np.zeros((k,), np.int64),
+                deadline_flushed=n_valid < k)
+            rows = slice(slot * k, (slot + 1) * k)
+            self._prompt_buf[rows] = np.stack(
+                [np.asarray(r.payload, np.int32) for r in plan.requests])
+            self._slots[slot] = group
+            self.groups.append(group)
+            admitted.append(group)
+            self.metrics.batches += 1
+            if group.deadline_flushed:
+                self.metrics.deadline_flushes += 1
+            self.trace.append(("admit", group.gid, slot, now,
+                               tuple(plan.uids), group.deadline_flushed))
+        return admitted
+
+    def _try_start_round(self, now: float, force: bool = False) -> None:
+        if self._inflight:
+            return
+        self._force = force
+        admitted = self._admit(now)
+        self._force = False
+        active = [g for g in self._slots if g is not None and g.prefilled]
+        if not admitted and not active:
+            return
+        times = self.latency_model.sample(self._rng,
+                                          self.scheme.num_workers)
+        if self.reputation is not None:
+            alive = self.reputation.active_mask(now)
+            times = np.where(alive > 0, times, np.inf)
+            # quarantine caps concurrent holds at E, so >= 1 worker is
+            # always alive; the clamp guards the invariant regardless
+            wait = max(1, min(self._wait_for, int(alive.sum())))
+        else:
+            wait = self._wait_for
+        mask, trigger = mask_from_completion_times(self.scheme, times,
+                                                   wait_for=wait)
+        attack = (self.adversary.next_round()
+                  if self.adversary is not None else None)
+        self._inflight = True
+        self.trace.append(("round", self._round_idx, now,
+                           tuple(g.gid for g in admitted),
+                           tuple(g.gid for g in active),
+                           tuple(np.flatnonzero(mask).tolist())))
+        self._push(now + float(trigger), _ROUND,
+                   (admitted, active, mask, attack))
+
+    def _on_round(self, t: float, data) -> None:
+        admitted, active, mask, attack = data
+        self._inflight = False
+        self.metrics.rounds += 1
+        pool = self.pool_groups
+        reports = []
+        if admitted:
+            admit_mask = np.zeros((pool,), np.float32)
+            admit_mask[[g.slot for g in admitted]] = 1.0
+            logits, self._state, report = self.executor.prefill(
+                self._state, self._prompt_buf, admit_mask, mask, attack)
+            reports.append((report, admit_mask))
+            for g in admitted:
+                g.prefilled = True
+                self._emit(g, logits, t, first=True)
+        if active:
+            act_mask = np.zeros((pool,), np.float32)
+            act_mask[[g.slot for g in active]] = 1.0
+            logits, self._state, report = self.executor.decode(
+                self._state, self._token_buf, act_mask, mask, attack)
+            reports.append((report, act_mask))
+            for g in active:
+                self._emit(g, logits, t, first=False)
+        self._observe(t, mask, attack, reports)
+        for g in admitted + active:
+            if g.done.all() and self._slots[g.slot] is g:
+                self._slots[g.slot] = None
+                self._free.append(g.slot)
+                self._free.sort()
+                self.trace.append(("free", g.gid, g.slot, t))
+        self._round_idx += 1
+        self._try_start_round(t)
+
+    def _emit(self, group: SlotGroup, logits: np.ndarray, t: float,
+              first: bool) -> None:
+        """Sample this round's token column for one group; retire
+        requests that hit their budget or EOS."""
+        k = self.scheme.k
+        rows = slice(group.slot * k, (group.slot + 1) * k)
+        toks = np.argmax(logits[rows], axis=-1).astype(np.int32)
+        live = ~group.done                       # before this round's token
+        self._token_buf[rows, 0] = toks
+        eos = self.config.eos_token_id
+        for i, req in enumerate(group.plan.requests):
+            if not live[i]:
+                continue
+            uid = req.uid
+            self._outs[uid].append(int(toks[i]))
+            group.gen[i] += 1
+            if first:
+                self._first_ms[uid] = t
+            if group.gen[i] >= group.budget[i] or \
+                    (eos is not None and int(toks[i]) == eos):
+                group.done[i] = True
+                self.results[uid] = np.asarray(self._outs[uid], np.int32)
+                self.trace.append(("retire", uid, group.gid, t,
+                                   int(group.gen[i])))
+                self.metrics.record(RequestRecord(
+                    uid=uid,
+                    arrival_ms=self._arrival_ms[uid],
+                    dispatch_ms=group.admit_ms,
+                    complete_ms=t,
+                    first_token_ms=self._first_ms[uid],
+                    tokens=int(group.gen[i])))
+
+    def _observe(self, t: float, mask: np.ndarray,
+                 attack: Optional[RoundAttack],
+                 reports: List[tuple]) -> None:
+        """Score ONE locate observation for the whole pool round.
+
+        A mixed round issues two jitted calls (admissions' prefill +
+        actives' decode) but is still one coded dispatch — one mask, one
+        attack — so their reports merge into a single observation: a
+        second strike per round would quarantine workers twice as fast
+        as the legacy scheduler under an identical config.  Each
+        in-program report is already composed with its live-slot mask
+        (free slots locate nothing); the per-call group mask restricts
+        the corrupted-decode check to rows that were actually decoded —
+        corruption "surviving" into a free slot's zeroed logits is not a
+        robustness failure.
+        """
+        reports = [(r, gm) for r, gm in reports if r is not None]
+        if not reports:
+            return
+        dispatched, true_corrupt = round_ground_truth(mask, attack)
+        # a slot is admitted OR active in a round, never both, so the
+        # reports' live rows are disjoint and merge by union
+        detected = np.zeros_like(dispatched)
+        decode_corrupt = False
+        for report, group_mask in reports:
+            detected |= report.detected
+            live = group_mask >= 0.5
+            decode_corrupt |= bool(
+                np.any((report.masks[live] >= 0.5) & true_corrupt[None, :]))
+        self.metrics.observe_locate(detected, true_corrupt, decode_corrupt)
+        if self.reputation is not None:
+            self.reputation.observe(t, detected, dispatched)

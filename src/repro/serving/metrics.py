@@ -36,6 +36,9 @@ class RequestRecord:
     complete_ms: float            # when the response left the scheduler
     speculative: bool = False     # served by the SLO early-decode path
     corrected: bool = False       # a later full decode revised the output
+    # -- autoregressive serving (continuous batching, DESIGN.md §10) --
+    first_token_ms: Optional[float] = None   # when the first token shipped
+    tokens: int = 0               # generated tokens (0: single-shot serve)
 
     @property
     def latency_ms(self) -> float:
@@ -49,6 +52,20 @@ class RequestRecord:
     def service_ms(self) -> float:
         return self.complete_ms - self.dispatch_ms
 
+    @property
+    def ttft_ms(self) -> Optional[float]:
+        """Time to first token (arrival -> first generated token)."""
+        if self.first_token_ms is None:
+            return None
+        return self.first_token_ms - self.arrival_ms
+
+    @property
+    def itl_ms(self) -> Optional[float]:
+        """Mean inter-token latency over the request's decode tail."""
+        if self.first_token_ms is None or self.tokens < 2:
+            return None
+        return (self.complete_ms - self.first_token_ms) / (self.tokens - 1)
+
 
 class ServingMetrics:
     """Accumulates request records and derives the serving scoreboard."""
@@ -57,6 +74,7 @@ class ServingMetrics:
         self.slo_ms = slo_ms
         self.records: List[RequestRecord] = []
         self.batches = 0
+        self.rounds = 0               # coded pool rounds (continuous path)
         self.deadline_flushes = 0     # batches dispatched by deadline
         self.speculative_decodes = 0  # batches early-decoded at the SLO
         self.corrections = 0          # speculative outputs later revised
@@ -119,6 +137,24 @@ class ServingMetrics:
         """Completed requests per second of event time."""
         return self.count / self.makespan_ms() * 1e3
 
+    def ttft_ms(self) -> np.ndarray:
+        """Time-to-first-token sample (autoregressively served requests
+        only — single-shot records carry no first-token timestamp)."""
+        return np.asarray([r.ttft_ms for r in self.records
+                           if r.first_token_ms is not None], np.float64)
+
+    def itl_ms(self) -> np.ndarray:
+        """Per-request mean inter-token latencies (>= 2 tokens)."""
+        return np.asarray([r.itl_ms for r in self.records
+                           if r.itl_ms is not None], np.float64)
+
+    def generated_tokens(self) -> int:
+        return int(sum(r.tokens for r in self.records))
+
+    def tokens_per_s(self) -> float:
+        """Generated tokens per second of event time."""
+        return self.generated_tokens() / self.makespan_ms() * 1e3
+
     def detection_precision(self) -> float:
         """Of the workers the locator confidently flagged, how many were
         truly corrupting?  NaN until a detection happened."""
@@ -161,6 +197,18 @@ class ServingMetrics:
             throughput_rps=self.throughput_rps(),
             goodput_rps=self.goodput_rps(),
         )
+        ttft = self.ttft_ms()
+        if ttft.size:
+            itl = self.itl_ms()
+            out.update(
+                rounds=float(self.rounds),
+                p50_ttft_ms=float(np.percentile(ttft, 50.0)),
+                p99_ttft_ms=float(np.percentile(ttft, 99.0)),
+                mean_itl_ms=(float(itl.mean()) if itl.size
+                             else float("nan")),
+                generated_tokens=float(self.generated_tokens()),
+                tokens_per_s=self.tokens_per_s(),
+            )
         if self.locate_rounds:
             out.update(
                 locate_rounds=float(self.locate_rounds),
@@ -184,6 +232,14 @@ class ServingMetrics:
             f"goodput  {s['goodput_rps']:.1f} req/s"
             + (f" at SLO {self.slo_ms:.1f}ms" if self.slo_ms else ""),
         ]
+        if self.ttft_ms().size:
+            lines.append(
+                f"ttft     p50 {s['p50_ttft_ms']:.2f}ms  "
+                f"p99 {s['p99_ttft_ms']:.2f}ms  itl "
+                f"{s['mean_itl_ms']:.2f}ms mean  "
+                f"({s['generated_tokens']:.0f} tokens over "
+                f"{s['rounds']:.0f} rounds, "
+                f"{s['tokens_per_s']:.1f} tok/s)")
         if self.speculative_decodes:
             lines.append(
                 f"speculative decodes {self.speculative_decodes}  "

@@ -75,6 +75,44 @@ def poisson_arrivals(n: int, rate_rps: float, seed: int = 0,
     return start_ms + np.cumsum(gaps)
 
 
+def derive_seed_streams(seed: int) -> Tuple[np.random.RandomState, int]:
+    """(worker-latency rng, arrival seed) from one scheduler seed.
+
+    Worker latencies and (fallback) arrivals must be INDEPENDENT
+    streams: reusing the config seed for both would correlate arrival
+    gaps with worker latencies draw for draw.  Shared by the legacy and
+    continuous schedulers so a seed means the same thing in both.
+    """
+    root = np.random.RandomState(seed)
+    rng = np.random.RandomState(root.randint(0, 2 ** 31 - 1))
+    return rng, int(root.randint(0, 2 ** 31 - 1))
+
+
+def resolve_arrivals(n_payloads: int,
+                     arrival_ms: Optional[Sequence[float]],
+                     rate_rps: Optional[float],
+                     arrival_seed: int) -> Sequence[float]:
+    """Validate/derive the arrival clock for a serving run."""
+    if arrival_ms is None:
+        if rate_rps is None:
+            raise ValueError("need arrival_ms or rate_rps")
+        arrival_ms = poisson_arrivals(n_payloads, rate_rps,
+                                      seed=arrival_seed)
+    if len(arrival_ms) != n_payloads:
+        raise ValueError("arrival_ms/payloads length mismatch")
+    return arrival_ms
+
+
+def round_ground_truth(mask: np.ndarray, attack) -> Tuple[np.ndarray,
+                                                          np.ndarray]:
+    """(dispatched, truly-corrupting-and-dispatched) bool masks for
+    scoring one locate round against the adversary's ground truth."""
+    dispatched = mask >= 0.5
+    corrupt = ((attack.mask >= 0.5) if attack is not None
+               else np.zeros_like(dispatched))
+    return dispatched, corrupt & dispatched
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Knobs of the serving runtime.
@@ -214,8 +252,10 @@ class CodedLLMExecutor:
     locator runs.  Returns the greedy-decoded token matrix (B, steps + 1).
 
     Note: partial (deadline-flushed) batches change the jitted batch
-    shape and recompile; size ``flush_deadline_ms``/load so full batches
-    dominate, or pad with ``pad="batch"``.
+    shape and recompile.  This run-to-completion executor is kept as the
+    batch-scoped baseline; the continuous slot-pool path
+    (``serving.continuous``, DESIGN.md §10) pins every shape to the pool
+    size, so partial batches and mid-flight admissions never retrace.
     """
 
     supports_speculation = False
@@ -256,10 +296,19 @@ class CodedLLMExecutor:
 
     def dispatch(self, queries) -> dict:
         return {"tokens": jnp.asarray(queries, jnp.int32),
-                "state": None, "logits": None, "outs": []}
+                "state": None, "logits": None, "outs": [], "round": 0}
 
     def _round(self, handle, round_idx: int, mask: np.ndarray,
                attack: Optional[RoundAttack]):
+        # Round accounting: every round of a batch must run exactly once,
+        # in order — ``decode`` issuing round ``rounds - 1`` regardless of
+        # how many ``step`` rounds actually ran would silently double-run
+        # (or skip) a coded round and shift every emitted token column.
+        if round_idx != handle["round"]:
+            raise RuntimeError(
+                f"round accounting violated: expected round "
+                f"{handle['round']}, got {round_idx} (of {self.rounds})")
+        handle["round"] = round_idx + 1
         m = jnp.asarray(mask, jnp.float32)
         bm, br, bs, collude = self._byz_args(attack)
         if round_idx == 0:
@@ -289,7 +338,12 @@ class CodedLLMExecutor:
     def decode(self, handle, mask: np.ndarray,
                attack: Optional[RoundAttack] = None):
         handle, rep = self._round(handle, self.rounds - 1, mask, attack)
-        return np.stack(handle["outs"], axis=1), rep      # (B, rounds)
+        outs = np.stack(handle["outs"], axis=1)           # (B, rounds)
+        # the full batch emits exactly 1 + steps token columns: one per
+        # coded round (prefill + each decode step), none double-counted
+        assert outs.shape[1] == self.rounds == handle["round"], \
+            f"emitted {outs.shape[1]} token columns over {self.rounds} rounds"
+        return outs, rep
 
 
 class CodedScheduler:
@@ -332,6 +386,11 @@ class CodedScheduler:
         self.batches: List[InflightBatch] = []
         self.results: Dict[int, np.ndarray] = {}
         self.spec_results: Dict[int, np.ndarray] = {}
+        # Golden-trace event log: one tuple per dispatch / round / spec /
+        # completion, in event order.  A seeded run must reproduce this
+        # sequence bit-for-bit (tests/test_scheduler.py golden test) —
+        # the safety net under scheduler refactors.
+        self.trace: List[tuple] = []
         self._wait_for = (scheme.decode_quorum if config.wait_for is None
                           else config.wait_for)
         if not 1 <= self._wait_for <= scheme.num_workers:
@@ -340,13 +399,7 @@ class CodedScheduler:
         self.adversary = make_adversary(scheme, config.adversary)
         self.reputation = (WorkerReputation(scheme, config.quarantine)
                            if config.quarantine is not None else None)
-        # worker latencies and (fallback) arrivals must be INDEPENDENT
-        # streams: derive distinct sub-seeds instead of reusing
-        # config.seed for both, which would correlate arrival gaps with
-        # worker latencies draw for draw
-        root = np.random.RandomState(config.seed)
-        self._rng = np.random.RandomState(root.randint(0, 2 ** 31 - 1))
-        self._arrival_seed = int(root.randint(0, 2 ** 31 - 1))
+        self._rng, self._arrival_seed = derive_seed_streams(config.seed)
         self._events: list = []
         self._seq = itertools.count()
         self._arrival_ms: Dict[int, float] = {}
@@ -361,13 +414,8 @@ class CodedScheduler:
     def run(self, payloads: Sequence[Any],
             arrival_ms: Optional[Sequence[float]] = None,
             rate_rps: Optional[float] = None) -> ServingMetrics:
-        if arrival_ms is None:
-            if rate_rps is None:
-                raise ValueError("need arrival_ms or rate_rps")
-            arrival_ms = poisson_arrivals(len(payloads), rate_rps,
-                                          seed=self._arrival_seed)
-        if len(arrival_ms) != len(payloads):
-            raise ValueError("arrival_ms/payloads length mismatch")
+        arrival_ms = resolve_arrivals(len(payloads), arrival_ms, rate_rps,
+                                      self._arrival_seed)
         for t, payload in zip(arrival_ms, payloads):
             self._push(float(t), _ARRIVAL, payload)
         while self._events or len(self.batcher):
@@ -426,6 +474,8 @@ class CodedScheduler:
         self.metrics.batches += 1
         if flushed:
             self.metrics.deadline_flushes += 1
+        self.trace.append(("dispatch", batch.bid, now, tuple(plan.uids),
+                           flushed))
         self._start_round(batch, now, 0)
 
     def _start_round(self, batch: InflightBatch, now: float,
@@ -439,7 +489,9 @@ class CodedScheduler:
             # results never land, so the wait-for selection skips them
             active = self.reputation.active_mask(now)
             times = np.where(active > 0, times, np.inf)
-            wait = min(self._wait_for, int(active.sum()))
+            # quarantine caps concurrent holds at E, so >= 1 worker is
+            # always alive; the clamp guards the invariant regardless
+            wait = max(1, min(self._wait_for, int(active.sum())))
         else:
             wait = self._wait_for
         mask, trigger = mask_from_completion_times(plan, times,
@@ -477,6 +529,8 @@ class CodedScheduler:
         batch, landed = data
         batch.spec_ms = t
         batch.spec_mask = landed
+        self.trace.append(("spec", batch.bid, t,
+                           tuple(np.flatnonzero(landed).tolist())))
         attack = batch.round_attacks[-1]
         batch.spec_outputs, _ = self.executor.decode(batch.handle, landed,
                                                      attack=attack)
@@ -490,6 +544,8 @@ class CodedScheduler:
         rounds = getattr(self.executor, "rounds", 1)
         mask = batch.round_masks[round_idx]
         attack = batch.round_attacks[round_idx]
+        self.trace.append(("round", batch.bid, round_idx, t,
+                           tuple(np.flatnonzero(mask).tolist())))
         if round_idx < rounds - 1:
             batch.handle, report = self.executor.step(batch.handle,
                                                       round_idx, mask,
@@ -503,6 +559,7 @@ class CodedScheduler:
         batch.round_reports.append(report)
         self._observe(t, mask, attack, report)
         batch.complete_ms = t
+        self.trace.append(("complete", batch.bid, t))
         corrected = self._corrections(batch)
         for slot, req in enumerate(batch.plan.requests):
             if not batch.plan.valid[slot]:
@@ -525,9 +582,7 @@ class CodedScheduler:
         """Score one locate round and feed the quarantine policy."""
         if report is None:
             return
-        dispatched = mask >= 0.5
-        true_corrupt = ((attack.mask >= 0.5) if attack is not None
-                        else np.zeros_like(dispatched)) & dispatched
+        dispatched, true_corrupt = round_ground_truth(mask, attack)
         detected = report.detected
         # corruption survived if a truly-corrupting worker stayed in any
         # group's decode mask

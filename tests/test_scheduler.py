@@ -189,6 +189,89 @@ class TestLLMExecutor:
             assert np.issubdtype(toks.dtype, np.integer)
 
 
+class TestGoldenTrace:
+    """Golden-trace determinism (legacy path): a seeded scheduler run
+    reproduces the exact dispatch/round/complete event sequence and the
+    metrics summary bit-for-bit — the safety net under scheduler
+    refactors.  (The continuous slot-pool path has its twin in
+    tests/test_continuous.py.)"""
+
+    def test_seeded_run_is_bit_reproducible(self):
+        runs = [_run(n_requests=80, k=4, s=1, rate_rps=5000.0,
+                     flush_deadline_ms=2.0, seed=3) for _ in range(2)]
+        (s1, m1, _), (s2, m2, _) = runs
+        assert len(s1.trace) > 20
+        assert s1.trace == s2.trace
+        assert m1.summary() == m2.summary()
+        for u in s1.results:
+            np.testing.assert_array_equal(s1.results[u], s2.results[u])
+
+    def test_trace_covers_every_batch_lifecycle(self):
+        sched, metrics, _ = _run(n_requests=64, k=4, s=1,
+                                 rate_rps=5000.0, seed=1)
+        dispatched = [e[1] for e in sched.trace if e[0] == "dispatch"]
+        completed = [e[1] for e in sched.trace if e[0] == "complete"]
+        assert sorted(dispatched) == sorted(b.bid for b in sched.batches)
+        assert sorted(completed) == sorted(dispatched)
+        # a batch never completes before it dispatches
+        seen = set()
+        for e in sched.trace:
+            if e[0] == "dispatch":
+                seen.add(e[1])
+            elif e[0] == "complete":
+                assert e[1] in seen
+
+    def test_different_seed_different_trace(self):
+        s1, _, _ = _run(n_requests=64, k=4, s=1, seed=0)
+        s2, _, _ = _run(n_requests=64, k=4, s=1, seed=5)
+        assert s1.trace != s2.trace
+
+
+class TestLLMRoundAccounting:
+    """Satellite: ``CodedLLMExecutor.decode`` must not double-run (or
+    skip) coded rounds — the final round is only valid after exactly
+    ``steps`` ``step()`` rounds, and a full batch emits exactly
+    ``steps + 1`` token columns."""
+
+    @pytest.fixture(scope="class")
+    def executor(self):
+        from repro import configs
+        from repro.models import init_params
+        from repro.serving.scheduler import CodedLLMExecutor
+
+        mcfg = configs.get_reduced("qwen3-0.6b")
+        params = init_params(mcfg, jax.random.PRNGKey(0))
+        return CodedLLMExecutor(mcfg, CodingConfig(k=2, s=1), params,
+                                steps=2, max_len=16)
+
+    def _handle(self, executor):
+        rng = np.random.RandomState(0)
+        return executor.dispatch(rng.randint(0, 256, (4, 6)))
+
+    def test_full_batch_emits_steps_plus_one_token_columns(self, executor):
+        handle = self._handle(executor)
+        mask = np.ones(executor.coding.num_workers, np.float32)
+        for r in range(executor.rounds - 1):
+            handle, _ = executor.step(handle, r, mask)
+        outs, _ = executor.decode(handle, mask)
+        assert outs.shape == (4, executor.rounds)       # (B, steps + 1)
+
+    def test_decode_after_too_few_steps_raises(self, executor):
+        handle = self._handle(executor)
+        mask = np.ones(executor.coding.num_workers, np.float32)
+        handle, _ = executor.step(handle, 0, mask)      # prefill only
+        with pytest.raises(RuntimeError, match="round accounting"):
+            executor.decode(handle, mask)               # skips round 1
+
+    def test_double_run_of_a_round_raises(self, executor):
+        handle = self._handle(executor)
+        mask = np.ones(executor.coding.num_workers, np.float32)
+        handle, _ = executor.step(handle, 0, mask)
+        handle, _ = executor.step(handle, 1, mask)
+        with pytest.raises(RuntimeError, match="round accounting"):
+            executor.step(handle, 1, mask)              # re-runs round 1
+
+
 class TestMetrics:
     def test_percentiles_monotone_and_goodput(self):
         m = ServingMetrics(slo_ms=10.0)

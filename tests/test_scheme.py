@@ -182,6 +182,84 @@ class TestZeroFailureEquivalence:
                                        err_msg=name)
 
 
+def _sane_params(name: str, s: int, e: int):
+    """Clamp drawn (s, e) to what the scheme's config accepts."""
+    if name == "parm":
+        return 1, 0
+    if name == "uncoded":
+        return 0, 0
+    return s, e
+
+
+def _check_quorum_decode(name: str, k: int, s: int, e: int, seed: int):
+    """Any availability mask down to ``decode_quorum`` responses yields
+    a finite (G*K, C) decode — no nans/infs from the recovery math."""
+    s, e = _sane_params(name, s, e)
+    scheme = get_scheme(name, k=k, s=s, e=e)
+    f = _mlp()
+    q = jnp.asarray(np.random.RandomState(seed % 9973).randn(2 * k, 16),
+                    jnp.float32)
+    outs = scheme.forward(f, scheme.encode(q.reshape(-1, k, 16)))
+    rng = np.random.RandomState(seed % 65521)
+    mask = np.ones(scheme.num_workers, np.float32)
+    drop = scheme.num_workers - scheme.decode_quorum
+    if drop:
+        mask[rng.choice(scheme.num_workers, size=drop,
+                        replace=False)] = 0.0
+    out = np.asarray(scheme.decode(outs, jnp.asarray(mask, jnp.float32)))
+    assert out.shape == (2 * k, 10)
+    assert np.isfinite(out).all(), f"{name} decode produced non-finite"
+
+
+def _check_full_availability(name: str, k: int, seed: int):
+    """With every worker available, every scheme's decode matches the
+    uncoded ground truth (berrut via its systematic variant; the model
+    is linear so ParM's untrained parity stream is exact too)."""
+    f = _linear(seed % 1000)
+    q = jnp.asarray(np.random.RandomState(seed % 9973).randn(2 * k, 16),
+                    jnp.float32)
+    kw = {"systematic": True} if name == "berrut" else {}
+    scheme = get_scheme(name, k=k, **kw)
+    ref = _roundtrip(get_scheme("uncoded", k=k), f, q)
+    out = _roundtrip(scheme, f, q)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3,
+                               err_msg=name)
+
+
+class TestSchemeProperties:
+    """Protocol-level properties over EVERY registered scheme.
+
+    Each property has a deterministic sweep (always runs) and a
+    hypothesis-driven version (skips without hypothesis via the
+    ``_hypothesis_fallback`` shim) hammering the same helper with drawn
+    parameters.
+    """
+
+    @pytest.mark.parametrize("name", sorted(scheme_names()))
+    @pytest.mark.parametrize("k,s,e", [(2, 1, 0), (4, 2, 0), (4, 1, 1),
+                                       (3, 0, 1)])
+    def test_quorum_decode_finite_sweep(self, name, k, s, e):
+        _check_quorum_decode(name, k, s, e, seed=k * 31 + s * 7 + e)
+
+    @pytest.mark.parametrize("name", sorted(scheme_names()))
+    def test_full_availability_matches_uncoded_sweep(self, name):
+        for k in (2, 4):
+            _check_full_availability(name, k, seed=k)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(2, 5), st.integers(0, 2), st.integers(0, 1),
+           st.integers(0, 2 ** 31 - 1))
+    def test_quorum_decode_finite_property(self, k, s, e, seed):
+        for name in scheme_names():
+            _check_quorum_decode(name, k, s, e, seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+    def test_full_availability_property(self, k, seed):
+        for name in scheme_names():
+            _check_full_availability(name, k, seed)
+
+
 class TestBerrutBitIdentical:
     """BerrutScheme via the protocol decodes bit-identically to the
     legacy ``coded_inference`` path — mask-fed and locator-driven."""

@@ -1,0 +1,370 @@
+"""Microbenchmark of the fused coded-round hot path (perf trajectory).
+
+Every coded serving round is: encode -> model step -> locate -> decode.
+This module measures each piece and the end-to-end jitted pool round so
+the round tail's cost is tracked as a TRAJECTORY (BENCH_coded_round.json)
+instead of anecdotes:
+
+  * ``tail``  — the locate+exclude+decode tail over a (G, N+1, V)
+    coded-logit block, three ways: the frozen PRE-PR XLA path (full
+    float32 upcast before the vote gather, per-coordinate monolithic-LU
+    locator, per-group decode matrices materialised in XLA), the FUSED
+    path this PR ships (``coded_serving._finish_round``: pre-cast
+    strided gather, Schur/Cholesky block locator, matrix-construction
+    fused into the decode contraction), and the kernel's combined
+    decode+gather ONE-PASS variant.
+  * ``encode`` — the Berrut encode contraction at embedding scale.
+  * ``round`` — end-to-end ``coded_pool_decode_step`` rounds on the
+    reduced LLM with donated pool state + on-device sampling, plus the
+    compiled program's memory analysis with and without donation (the
+    double-allocation of the pool KV that donation removes).
+
+Timing is median-of-reps (shared CI boxes are noisy).  ``--json`` writes
+the result document; bench-smoke CI runs ``--smoke --json`` and gates
+against the checked-in baseline via scripts/check_bench_regression.py.
+
+  PYTHONPATH=src python -m benchmarks.bench_coded_round --smoke --json \\
+      benchmarks/results/BENCH_coded_round.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+_RIDGE = 1e-7
+
+
+def _med_timed(fn, *args, iters=3, reps=5, warmup=2):
+    """Median-of-reps wall time per call in us (noise-robust)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) / iters * 1e6)
+    return float(np.median(ts))
+
+
+def _paired_timed(fns, args, iters=3, reps=5, warmup=2):
+    """Time several functions INTERLEAVED rep by rep, medians per fn.
+
+    Shared CI/dev boxes drift by whole multiples within seconds; timing
+    the baseline and the fused path back to back in alternating reps
+    means both see the same noise environment, so their RATIO (the
+    number the acceptance bar and the regression gate care about) is
+    far more stable than any absolute measurement."""
+    import jax
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    ts = [[] for _ in fns]
+    for _ in range(reps):
+        for slot, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            ts[slot].append((time.perf_counter() - t0) / iters * 1e6)
+    return [float(np.median(t)) for t in ts]
+
+
+def _pre_pr_tail_fn(coding, g: int, v: int):
+    """The coded-round tail EXACTLY as it ran before the fused path — a
+    frozen snapshot, so the trajectory always compares against the same
+    baseline: ``grouped.astype(float32)`` materialises the full block
+    before the vote-coordinate gather, each coordinate solves the
+    monolithic 2(K+E)-1 ridge system with a general LU, and the decode
+    builds (G, K, N+1) matrices in XLA and contracts them separately."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import berrut
+    from repro.core.error_locator import chebyshev_design, vote_coordinates
+    from repro.kernels import ops
+
+    betas = jnp.asarray(coding.betas, jnp.float32)
+    k, e, n1 = coding.k, coding.e, coding.num_workers
+    deg = k + e - 1
+
+    def q_mag(y, avail):
+        t = chebyshev_design(betas, deg)
+        mask = avail.astype(y.dtype)
+        scale = jnp.max(jnp.abs(y) * mask) + 1e-12
+        ys = y / scale
+        a = jnp.concatenate([t, -ys[:, None] * t[:, 1:]], -1) * mask[:, None]
+        b = ys * mask
+        gram = a.T @ a
+        sol = jnp.linalg.solve(
+            gram + _RIDGE * jnp.eye(gram.shape[0], dtype=gram.dtype),
+            a.T @ b)
+        q = jnp.concatenate([jnp.ones((1,), sol.dtype), sol[deg + 1:]])
+        qv = jnp.abs(t @ q)
+        big = jnp.asarray(jnp.finfo(qv.dtype).max, qv.dtype)
+        return jnp.where(mask.astype(bool), qv, big)
+
+    def vote(vals, avail):                         # (N+1, C) -> (N+1,)
+        def per_coord(y):
+            scores = q_mag(y, avail)
+            _, idx = jax.lax.top_k(-scores, e)
+            return idx
+        locs = jax.vmap(per_coord, in_axes=1)(vals)
+        votes = jnp.zeros((n1,), jnp.int32).at[locs.reshape(-1)].add(1)
+        return jnp.where(avail.astype(bool), votes, -1)
+
+    def tail(coded_logits, avail):
+        grouped = coded_logits.reshape(g, n1, v)
+        flat = grouped.astype(jnp.float32)         # the full-block upcast
+        coords = vote_coordinates(v, coding.c_vote)
+        vals = flat[:, :, coords]
+        if e > 0:
+            votes = jax.vmap(lambda vv: vote(vv, avail))(vals)
+            pooled = jnp.sum(jnp.maximum(votes, 0), axis=0)
+            pooled = jnp.where(avail.astype(bool), pooled, -1)
+            _, top = jax.lax.top_k(pooled, e)
+            top_mask = jnp.zeros((n1,), bool).at[top].set(True)
+            confident = pooled * 2 > g * vals.shape[-1]
+            located = ((top_mask & confident)[None, :]
+                       & jnp.broadcast_to(avail.astype(bool), (g, n1)))
+            masks = avail[None, :] * (1.0 - located.astype(avail.dtype))
+        else:
+            masks = jnp.broadcast_to(avail, (g, n1))
+
+        def dec(group, m):
+            w = berrut.decode_matrix(coding, m).astype(group.dtype)
+            return ops.berrut_apply(w, group)
+
+        return jax.vmap(dec)(grouped, masks).reshape(g * k, v)
+
+    return jax.jit(tail)
+
+
+def _tail_cell(coding, g, v, dtype_name, iters, reps, emit):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.error_locator import gather_vote_values, locate_groups
+    from repro.kernels import ops
+    from repro.serving import coded_serving
+
+    dtype = jnp.bfloat16 if dtype_name == "bf16" else jnp.float32
+    n1 = coding.num_workers
+    rng = np.random.RandomState(0)
+    block = jnp.asarray(rng.randn(g * n1, v), jnp.float32).astype(dtype)
+    avail = jnp.ones((n1,), jnp.float32)
+    alphas = jnp.asarray(coding.alphas, jnp.float32)
+    betas = jnp.asarray(coding.betas, jnp.float32)
+
+    pre = _pre_pr_tail_fn(coding, g, v)
+    fused = jax.jit(lambda cl, av: coded_serving._finish_round(
+        coding, cl, av, True)[0])
+    locate_only = jax.jit(lambda cl, av: locate_groups(
+        betas, gather_vote_values(cl.reshape(g, n1, v), coding.c_vote),
+        av, k=coding.k, e=coding.e)[0]) if coding.e else None
+    masks2d = jnp.ones((g, n1), jnp.float32)
+    decode_only = jax.jit(lambda cl, mm: ops.fused_group_decode(
+        cl.reshape(g, n1, v), mm, alphas, betas))
+    one_pass = jax.jit(lambda cl, av: ops.fused_group_decode(
+        cl.reshape(g, n1, v), av, alphas, betas,
+        c_vote=coding.c_vote)[0]) if coding.e else None
+
+    pre_us, fused_us = _paired_timed((pre, fused), (block, avail),
+                                     iters=iters, reps=reps)
+    cell = {
+        "k": coding.k, "s": coding.s, "e": coding.e, "v": v, "groups": g,
+        "dtype": dtype_name,
+        "pre_pr_us": pre_us,
+        "fused_us": fused_us,
+        "decode_us": _med_timed(decode_only, block, masks2d, iters=iters,
+                                reps=reps),
+    }
+    if coding.e:
+        cell["locate_us"] = _med_timed(locate_only, block, avail,
+                                       iters=iters, reps=reps)
+        cell["one_pass_us"] = _med_timed(one_pass, block, avail,
+                                         iters=iters, reps=reps)
+    cell["speedup_vs_pre_pr"] = cell["pre_pr_us"] / cell["fused_us"]
+    key = (f"k{coding.k}_s{coding.s}_e{coding.e}_v{v}_{dtype_name}")
+    emit(f"bench_coded_round/tail_{key}", cell["fused_us"],
+         f"pre_pr={cell['pre_pr_us']:.0f}us;"
+         f"speedup={cell['speedup_vs_pre_pr']:.2f}x")
+    return key, cell
+
+
+def _encode_cell(coding, g, d, iters, reps, emit):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import berrut
+    from repro.kernels import ops
+
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(g, coding.k, d), jnp.float32)
+    w = berrut.encode_matrix(coding)
+    enc = jax.jit(lambda xx: ops.berrut_apply(w, xx))
+    us = _med_timed(enc, x, iters=iters, reps=reps)
+    emit(f"bench_coded_round/encode_k{coding.k}_n{coding.num_workers}",
+         us, f"groups={g};features={d}")
+    return {"k": coding.k, "workers": coding.num_workers, "groups": g,
+            "features": d, "encode_us": us}
+
+
+def _mem_fields(ma):
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes"):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field.replace("_in_bytes", "")] = int(val)
+    if out:
+        out["peak_bytes"] = (out.get("argument_size", 0)
+                             + out.get("output_size", 0)
+                             + out.get("temp_size", 0)
+                             - out.get("alias_size", 0))
+    return out
+
+
+def _round_cell(coding, pool_groups, prompt_len, rounds, reps, emit):
+    """End-to-end jitted pool decode rounds on the reduced LLM, with the
+    production executor (donated state + on-device sampling), plus the
+    compiled step's memory analysis donated vs not."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.models import init_params
+    from repro.serving.coded_serving import coded_pool_decode_step
+    from repro.serving.continuous import ContinuousLLMExecutor
+
+    cfg = configs.get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_len = prompt_len + rounds * reps + 8
+    executor = ContinuousLLMExecutor(cfg, coding, params,
+                                     pool_groups=pool_groups,
+                                     max_len=max_len)
+    state = executor.init_state()
+    pk = pool_groups * coding.k
+    rng = np.random.RandomState(2)
+    prompts = rng.randint(0, cfg.vocab_size,
+                          (pk, prompt_len)).astype(np.int32)
+    ones_p = np.ones((pool_groups,), np.float32)
+    ones_w = np.ones((coding.num_workers,), np.float32)
+    tokens, state, _ = executor.prefill(state, prompts, ones_p, ones_w)
+    token_buf = tokens.reshape(pk, 1).astype(np.int32)
+
+    # warmup (also compiles the decode step once)
+    tokens, state, _ = executor.decode(state, token_buf, ones_p, ones_w)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            tokens, state, _ = executor.decode(state, token_buf, ones_p,
+                                               ones_w)
+        ts.append((time.perf_counter() - t0) / rounds * 1e6)
+    round_us = float(np.median(ts))
+
+    # memory analysis of the same step program, donated vs not
+    mem = {}
+    try:
+        state2 = executor.init_state()
+        args = (params, state2, jnp.asarray(token_buf),
+                jnp.ones((pool_groups,), jnp.float32),
+                jnp.ones((coding.num_workers,), jnp.float32))
+
+        def step(p, st, t, a, m):
+            return coded_pool_decode_step(cfg, coding, p, st, t, a,
+                                          straggler_mask=m)
+
+        for name, donate in (("undonated", ()), ("donated", (1,))):
+            compiled = jax.jit(step, donate_argnums=donate).lower(
+                *args).compile()
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                mem[name] = _mem_fields(ma)
+        if "donated" in mem and "undonated" in mem:
+            mem["peak_saved_bytes"] = (mem["undonated"]["peak_bytes"]
+                                       - mem["donated"]["peak_bytes"])
+    except Exception as exc:               # memory analysis is best-effort
+        mem = {"error": repr(exc)}
+
+    tokens_per_s = pk / (round_us / 1e6)
+    key = f"pool{pool_groups}_k{coding.k}_s{coding.s}_e{coding.e}"
+    emit(f"bench_coded_round/round_{key}", round_us,
+         f"tokens_per_s={tokens_per_s:.0f};"
+         f"peak_saved={mem.get('peak_saved_bytes', 'n/a')}")
+    return key, {"pool_groups": pool_groups, "k": coding.k, "s": coding.s,
+                 "e": coding.e, "round_us": round_us,
+                 "tokens_per_s": tokens_per_s, "memory": mem}
+
+
+def run(emit=None):
+    from benchmarks import common
+    from repro.core.berrut import CodingConfig
+
+    emit = emit or common.emit
+    smoke = common.SMOKE
+    if smoke:
+        v, g, d = 2048, 2, 512
+        tail_cfgs = [((4, 1, 1), "f32")]
+        pools = [2]
+        iters, reps, rounds = 2, 3, 3
+    else:
+        v, g, d = 32768, 4, 2048
+        tail_cfgs = [((4, 1, 0), "f32"), ((4, 1, 1), "f32"),
+                     ((8, 1, 1), "f32"), ((8, 1, 1), "bf16"),
+                     ((8, 2, 2), "f32")]
+        pools = [2, 4]
+        iters, reps, rounds = 5, 7, 8
+
+    out = {"smoke": smoke, "schema": 1, "tail": {}, "encode": [],
+           "round": {}}
+    for (k, s, e), dtype_name in tail_cfgs:
+        coding = CodingConfig(k=k, s=s, e=e, c_vote=64)
+        key, cell = _tail_cell(coding, g, v, dtype_name, iters, reps, emit)
+        out["tail"][key] = cell
+    for k, s in ((4, 1), (8, 1)) if not smoke else ((4, 1),):
+        out["encode"].append(_encode_cell(CodingConfig(k=k, s=s), g, d,
+                                          iters, reps, emit))
+    for pool in pools:
+        coding = CodingConfig(k=2, s=1, e=0)
+        key, cell = _round_cell(coding, pool, prompt_len=8, rounds=rounds,
+                                reps=reps, emit=emit)
+        out["round"][key] = cell
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shapes mode (REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the result document as JSON")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # must precede the benchmarks.common import inside run()
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    print("name,us_per_call,derived")
+    out = run()
+    if args.json:
+        path = os.path.abspath(args.json)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(out, fh, indent=1)
+        print(f"# wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -51,8 +51,8 @@ def main(argv=None) -> None:
         # off benchmarks.common.SMOKE at import time
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
-    from benchmarks import (bench_kernels, fig_acc_archs, fig_acc_trained_lm,
-                            fig_acc_vs_e,
+    from benchmarks import (bench_coded_round, bench_kernels, fig_acc_archs,
+                            fig_acc_trained_lm, fig_acc_vs_e,
                             fig_acc_vs_k, fig_acc_vs_s, fig_byzantine_serving,
                             fig_scheme_faceoff, fig_sigma,
                             fig_cvote_ablation, fig_systematic,
@@ -75,6 +75,8 @@ def main(argv=None) -> None:
         ("fig_scheme_faceoff (paper Figs 3/5/6 + §1 overhead, one sweep)",
          fig_scheme_faceoff),
         ("table_overhead (paper §1/§4)", table_overhead),
+        ("bench_coded_round (fused round hot path, perf trajectory)",
+         bench_coded_round),
         ("bench_kernels", bench_kernels),
         ("roofline_table (deliverable g)", roofline_table),
     ]

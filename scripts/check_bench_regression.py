@@ -1,0 +1,88 @@
+"""CI gate: fail when the coded-round smoke bench regresses vs baseline.
+
+Compares the latency fields of a fresh ``bench_coded_round --smoke
+--json`` run against the checked-in baseline JSON and exits non-zero if
+any metric exceeds ``--max-ratio`` times its baseline value (default 2x
+— generous because CI boxes are noisy and shared; the trajectory, not
+the absolute number, is the contract).  Only keys present in BOTH
+documents are compared, so adding a new sweep cell never breaks the
+gate; removing one prints a warning (a silently vanished measurement
+would otherwise read as "no regression").
+
+  python scripts/check_bench_regression.py \\
+      benchmarks/results/BENCH_coded_round.json \\
+      benchmarks/baselines/bench_coded_round_smoke_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Latency fields gated per cell: only the SHIPPED paths (the fused
+# tail, the encode contraction, the end-to-end round).  The pre-PR
+# baseline and sub-phase timings stay informational — absolute timings
+# on shared boxes burst 2-3x (EXPERIMENTS.md §9), so gating every raw
+# field would make the job flaky without guarding anything users run.
+_GATED = ("fused_us", "encode_us", "round_us")
+
+
+def _cells(doc):
+    for section in ("tail", "round"):
+        for key, cell in (doc.get(section) or {}).items():
+            yield f"{section}.{key}", cell
+    for cell in doc.get("encode") or []:
+        # key by configuration, not list position — inserting a sweep
+        # cell must never silently compare mismatched configs
+        yield f"encode.k{cell.get('k')}_n{cell.get('workers')}", cell
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("current", help="fresh --smoke --json output")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when current > ratio * baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as fh:
+        current = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    cur = dict(_cells(current))
+    base = dict(_cells(baseline))
+    failures, compared = [], 0
+    for key, bcell in base.items():
+        ccell = cur.get(key)
+        if ccell is None:
+            print(f"warning: baseline cell {key!r} missing from current "
+                  "run (sweep shrank?)", file=sys.stderr)
+            continue
+        for field in _GATED:
+            if field not in bcell or field not in ccell:
+                continue
+            compared += 1
+            ratio = ccell[field] / max(bcell[field], 1e-9)
+            line = (f"{key}.{field}: {ccell[field]:.1f}us vs baseline "
+                    f"{bcell[field]:.1f}us ({ratio:.2f}x)")
+            if ratio > args.max_ratio:
+                failures.append(line)
+                print("REGRESSION " + line)
+            else:
+                print("ok         " + line)
+    if not compared:
+        print("error: no comparable metrics between current and baseline",
+              file=sys.stderr)
+        return 2
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed more than "
+              f"{args.max_ratio}x", file=sys.stderr)
+        return 1
+    print(f"\nall {compared} metrics within {args.max_ratio}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

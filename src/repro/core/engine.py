@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core import berrut
 from repro.core.berrut import CodingConfig
-from repro.core.error_locator import locate_groups, vote_coordinates
+from repro.core.error_locator import gather_vote_values, locate_groups
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,10 +105,12 @@ def locate_and_decode(cfg: CodingConfig, preds: jnp.ndarray,
     global LOCATE_AND_DECODE_TRACES
     LOCATE_AND_DECODE_TRACES += 1
     g = preds.shape[0]
-    flat = preds.reshape(g, cfg.num_workers, -1).astype(jnp.float32)
-    coords = vote_coordinates(flat.shape[-1], cfg.c_vote)
+    # gather the vote coordinates BEFORE the float32 upcast: only the
+    # (G, N+1, C_vote) slice is cast, never the whole prediction block
+    vals = gather_vote_values(preds.reshape(g, cfg.num_workers, -1),
+                              cfg.c_vote)
     betas = jnp.asarray(cfg.betas, jnp.float32)
-    located, votes = locate_groups(betas, flat[:, :, coords], avail,
+    located, votes = locate_groups(betas, vals, avail,
                                    k=cfg.k, e=cfg.e)
     avail2d = avail if avail.ndim == 2 else jnp.broadcast_to(
         avail, (g, cfg.num_workers))

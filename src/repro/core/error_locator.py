@@ -43,6 +43,25 @@ def solve_pq(betas: jnp.ndarray, y: jnp.ndarray, avail_mask: jnp.ndarray,
 
     (Algorithm 2 Steps 1-2.)  Returns (p_coef, q_coef) in the Chebyshev
     basis; q_coef includes the pinned leading 1.
+
+    Perf (DESIGN.md §11): this runs vmapped over groups x C_vote logit
+    coordinates every serving round, so the ridge normal equations are
+    built and solved BLOCKWISE.  The design matrix ``A = [T, -y T'] *
+    mask`` is never materialised per coordinate — the Gram blocks
+    contract the constant Chebyshev designs against per-coordinate
+    weight vectors, which XLA batches into a handful of skinny matmuls.
+    The solve eliminates the P-coefficient block by its Schur
+    complement: the P block ``A11 = T^T m T`` is a Chebyshev Gram —
+    well-conditioned and SPD, so its factorisation is a safe Cholesky
+    AND depends only on the availability mask, hoisting out of the
+    per-coordinate vmap entirely; what remains per coordinate is a
+    (K+E-1)-sized LU instead of the (2(K+E)-1)-sized one it replaces
+    (~8x fewer solve flops at K=8, E=1).  The full Gram is only
+    near-singular in the Q directions (that near-null space IS the
+    error locator), and those stay in the pivoted LU, so the stability
+    class of the old full-system LU is preserved — blockwise
+    elimination of an SPD system's well-conditioned leading block is
+    exactly the ordering a pivoted factorisation would pick.
     """
     deg = k + e - 1                       # polynomials have K+E coefficients
     t = chebyshev_design(betas, deg)      # (N+1, K+E)
@@ -51,16 +70,48 @@ def solve_pq(betas: jnp.ndarray, y: jnp.ndarray, avail_mask: jnp.ndarray,
     # logit magnitude.
     scale = jnp.max(jnp.abs(y) * mask) + 1e-12
     ys = y / scale
-    # Unknowns: P_0..P_{deg}  and  Q_1..Q_{deg}   (Q_0 = 1 pinned)
-    a = jnp.concatenate([t, -ys[:, None] * t[:, 1:]], axis=-1)
-    a = a * mask[:, None]
-    b = ys * mask
-    gram = a.T @ a
-    rhs = a.T @ b
-    n_unk = gram.shape[0]
-    sol = jnp.linalg.solve(gram + _RIDGE * jnp.eye(n_unk, dtype=gram.dtype), rhs)
-    p_coef = sol[: deg + 1] * scale
-    q_coef = jnp.concatenate([jnp.ones((1,), sol.dtype), sol[deg + 1:]])
+    # Unknowns: P_0..P_{deg}  and  Q_1..Q_{deg}   (Q_0 = 1 pinned).
+    # Gram blocks of A^T A with A = [T, -ys*T1] * mask (T1 = T[:, 1:]):
+    t1 = t[:, 1:]
+    m2 = mask * mask
+    w1 = m2 * ys
+    w2 = w1 * ys
+    eye1 = jnp.eye(deg + 1, dtype=t.dtype)
+    a11 = jnp.einsum("ni,nj->ij", t * m2[:, None], t) + _RIDGE * eye1
+    r1 = w1 @ t
+    if deg == 0:                          # K = 1, E = 0: Q is the pinned 1
+        p = jnp.linalg.solve(a11, r1)
+        return p * scale, jnp.ones((1,), p.dtype)
+    a12 = -jnp.einsum("n,ni,nj->ij", w1, t, t1)
+    a22 = (jnp.einsum("n,ni,nj->ij", w2, t1, t1)
+           + _RIDGE * jnp.eye(deg, dtype=t.dtype))
+    r2 = -(w2 @ t1)
+    c11 = jax.scipy.linalg.cho_factor(a11, lower=True)
+    # one multi-rhs triangular solve covers A11^-1 [A12 | r1] — fewer
+    # tiny dispatches than solving each right-hand side separately
+    x = jax.scipy.linalg.cho_solve(c11, jnp.concatenate(
+        [a12, r1[:, None]], axis=1))
+    x12, x1 = x[:, :-1], x[:, -1]                         # A11^-1 A12/r1
+    schur = a22 - a12.T @ x12
+    lu = jax.scipy.linalg.lu_factor(schur)
+
+    def block_solve(b1, b2, u1=None):
+        if u1 is None:
+            u1 = jax.scipy.linalg.cho_solve(c11, b1)
+        q = jax.scipy.linalg.lu_solve(lu, b2 - a12.T @ u1)
+        return u1 - x12 @ q, q
+
+    p, q_tail = block_solve(r1, r2, u1=x1)
+    # One step of iterative refinement through the reusable block
+    # factorisation: recovers the residual accuracy of the full pivoted
+    # LU in fp32 at a fraction of its cost (the extra work is two small
+    # matvecs and a pair of triangular solves).
+    res1 = r1 - (a11 @ p + a12 @ q_tail)
+    res2 = r2 - (a12.T @ p + a22 @ q_tail)
+    dp, dq = block_solve(res1, res2)
+    p, q_tail = p + dp, q_tail + dq
+    p_coef = p * scale
+    q_coef = jnp.concatenate([jnp.ones((1,), p.dtype), q_tail])
     return p_coef, q_coef
 
 
@@ -196,11 +247,40 @@ def locate_groups(betas: jnp.ndarray, grouped_values: jnp.ndarray,
     return located, votes
 
 
+def vote_layout(num_classes: int, c_vote: int) -> tuple[int, int]:
+    """(count, stride) of the vote-coordinate subset.
+
+    THE single definition of the Algorithm-2 coordinate scheme:
+    ``vote_coordinates``, ``gather_vote_values``, and the fused
+    kernel's in-pass gather (``kernels.berrut_decode.gather_layout``)
+    all derive from it — they must pick identical coordinates or the
+    serving, engine, and oracle locate paths silently diverge.
+    """
+    c = min(num_classes, c_vote)
+    return c, max(num_classes // c, 1)
+
+
 def vote_coordinates(num_classes: int, c_vote: int) -> jnp.ndarray:
     """Strided subset of logit coordinates used for the majority vote."""
-    c = min(num_classes, c_vote)
-    stride = max(num_classes // c, 1)
+    c, stride = vote_layout(num_classes, c_vote)
     return jnp.arange(c) * stride
+
+
+def gather_vote_values(grouped: jnp.ndarray, c_vote: int) -> jnp.ndarray:
+    """(..., N+1, C_total) -> (..., N+1, C_vote) float32 vote columns.
+
+    Gather the strided vote coordinates from the RAW block and upcast
+    only the gathered slice.  The pre-fused path did it the other way
+    around — ``grouped.astype(jnp.float32)[..., coords]`` — which asked
+    XLA to materialise a float32 copy of the entire coded-logit block
+    just to read ~64 columns of it.  Cast and gather commute exactly
+    (elementwise), so the verdicts are bit-identical.
+    """
+    c, stride = vote_layout(grouped.shape[-1], c_vote)
+    # the vote coordinates are arange(c) * stride by construction, so
+    # the "gather" is a strided basic slice — XLA lowers it to a cheap
+    # lax.slice instead of a general gather
+    return grouped[..., : c * stride : stride].astype(jnp.float32)
 
 
 def locate_errors_from_logits(cfg: CodingConfig, betas: jnp.ndarray,

@@ -21,15 +21,24 @@ from repro.kernels import ref
 
 FORCE_IMPL: Optional[str] = None
 
+# Cached jax.devices() platform lookup: every op invocation used to call
+# jax.devices() (which grabs a lock and builds the device list) just to
+# re-learn the backend.  The platform cannot change within a process, so
+# resolve it once; FORCE_IMPL keeps its override semantics because it is
+# consulted BEFORE the cache on every call (tests flip it at runtime).
+_PLATFORM: Optional[str] = None
+
 
 def _impl() -> str:
+    global _PLATFORM
     if FORCE_IMPL is not None:
         return FORCE_IMPL
-    try:
-        platform = jax.devices()[0].platform
-    except RuntimeError:
-        platform = "cpu"
-    return "pallas" if platform == "tpu" else "jnp"
+    if _PLATFORM is None:
+        try:
+            _PLATFORM = jax.devices()[0].platform
+        except RuntimeError:
+            _PLATFORM = "cpu"
+    return "pallas" if _PLATFORM == "tpu" else "jnp"
 
 
 def berrut_apply(weights: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -39,6 +48,24 @@ def berrut_apply(weights: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
         return berrut_matmul.berrut_apply(
             weights, x, interpret=impl == "interpret")
     return ref.berrut_apply_ref(weights, x)
+
+
+def fused_group_decode(grouped: jnp.ndarray, masks: jnp.ndarray,
+                      alphas: jnp.ndarray, betas: jnp.ndarray, *,
+                      c_vote: int = 0):
+    """Fused coded-round tail: per-group decode-matrix construction +
+    (G, N+1, V) -> (G, K, V) contraction (+ the locator's strided
+    vote-coordinate gather when ``c_vote > 0``) in one pass over the
+    coded-logit block.  masks: (N+1,) shared or (G, N+1) per-group.
+    """
+    impl = _impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import berrut_decode
+        return berrut_decode.fused_group_decode(
+            grouped, masks, alphas, betas, c_vote=c_vote,
+            interpret=impl == "interpret")
+    return ref.fused_group_decode_ref(grouped, masks, alphas, betas,
+                                      c_vote=c_vote)
 
 
 # XLA-path attention implementation: "naive" materialises (S, L) scores;

@@ -27,6 +27,54 @@ def berrut_apply_ref(weights: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
                       x.astype(jnp.float32)).astype(x.dtype)
 
 
+def fused_group_decode_ref(grouped: jnp.ndarray, masks: jnp.ndarray,
+                           alphas: jnp.ndarray, betas: jnp.ndarray, *,
+                           c_vote: int = 0):
+    """Oracle for ``berrut_decode.fused_group_decode``.
+
+    (G, N+1, V) coded block + masks -> (G, K, V) decoded logits via the
+    canonical ``core.berrut`` survivor-weight matrix construction, plus
+    (with ``c_vote > 0``) the (G, N+1, C) float32 vote-coordinate gather
+    — read from the raw block BEFORE the float32 upcast (a locate-only
+    caller never forces a full-precision copy; the decode's f32 convert
+    exists only to feed its own contraction).
+
+    masks: (N+1,) shared availability (one decode matrix for every
+    group) or (G, N+1) per-group exclusion masks.
+    """
+    from repro.core import berrut
+    from repro.core.error_locator import gather_vote_values
+
+    def matrix(m):
+        return berrut.basis_matrix(alphas, betas,
+                                   berrut.survivor_weights(m), mask=m)
+
+    # one convert feeding the batched matmul (the contraction needs the
+    # f32 operand materialised either way; converting inside the vmap
+    # makes XLA CPU stage it per group, measurably slower at bf16)
+    grouped32 = grouped.astype(jnp.float32)
+
+    def contract(w, x):
+        return jnp.dot(w, x, preferred_element_type=jnp.float32)
+
+    if masks.ndim == 1:
+        # One shared mask: broadcast the MASK, not the matrix, and take
+        # the same per-group batched path.  Rebuilding the (tiny) matrix
+        # per group is free next to the (N+1, V) contraction, while both
+        # a plain (K, N+1) @ (G, N+1, V) free-dim contraction and a
+        # broadcast-matrix batched dot make XLA pick slow layouts
+        # (transpose of the full output block / degenerate batch
+        # strides) — measured up to ~7x slower at V = 32k.
+        masks = jnp.broadcast_to(masks, (grouped.shape[0],
+                                         masks.shape[0]))
+    decoded = jax.vmap(
+        lambda m, x: contract(matrix(m), x))(masks, grouped32)
+    decoded = decoded.astype(grouped.dtype)
+    if c_vote <= 0:
+        return decoded
+    return decoded, gather_vote_values(grouped, c_vote)
+
+
 # ---------------------------------------------------------------- attention
 
 def _mask_bias(q_len: int, kv_len: int, *, causal: bool,

@@ -53,7 +53,7 @@ from repro.models import predict_fn as make_predict_fn
 from repro.serving import (AdversaryConfig, CodedLLMExecutor, CodedScheduler,
                            ContinuousConfig, ContinuousLLMExecutor,
                            ContinuousScheduler, EngineExecutor, LatencyModel,
-                           QuarantineConfig, SchedulerConfig,
+                           QuarantineConfig, SampleConfig, SchedulerConfig,
                            percentile_table)
 
 
@@ -64,7 +64,8 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         attack: str = "persistent", attack_rate: float = 1.0,
         attack_placement: str = "random", quarantine: bool = False,
         probation_ms: float = 200.0, scheme: str = "berrut",
-        continuous: bool = False, pool_groups: int = 4):
+        continuous: bool = False, pool_groups: int = 4,
+        top_k: int = 1, temperature: float = 1.0):
     cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(seed)
@@ -91,6 +92,9 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
     if continuous and scheme != "berrut":
         raise ValueError("--continuous drives the jitted berrut slot-pool "
                          f"path; scheme {scheme!r} serves single-shot")
+    # On-device token selection (DESIGN.md §11): the jitted steps return
+    # (B,) int32 sampled ids, never round-tripping (B, V) logits.
+    sample = SampleConfig(top_k=top_k, temperature=temperature)
     latency_model = LatencyModel()
     token_prompts = [rng.randint(0, cfg.vocab_size,
                                  (prompt_len,)).astype(np.int32)
@@ -103,7 +107,8 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         executor = ContinuousLLMExecutor(
             cfg, coding, params, pool_groups=pool_groups,
             max_len=prompt_len + steps + 2,
-            byz_collude=(attack == "colluding" and e > 0))
+            byz_collude=(attack == "colluding" and e > 0),
+            sample=sample, sample_seed=seed)
         payloads = token_prompts
         budgets = rng.randint(1, steps + 1, size=requests)
     elif scheme == "berrut":
@@ -111,7 +116,7 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         # prompts, every decode round is a coded dispatch
         executor = CodedLLMExecutor(cfg, coding, params, steps=steps,
                                     max_len=prompt_len + steps + 2,
-                                    seed=seed)
+                                    seed=seed, sample=sample)
         payloads = token_prompts
     else:
         # scheme-generic single-shot path: payloads are residual-stream
@@ -224,6 +229,12 @@ def main():
                          "pool (berrut only; DESIGN.md §10)")
     ap.add_argument("--pool-groups", type=int, default=4,
                     help="group-slot capacity of the continuous pool")
+    ap.add_argument("--top-k", type=int, default=1,
+                    help="on-device sampling: 1 = greedy, > 1 samples "
+                         "from the temperature-scaled top-k logits "
+                         "(berrut LLM paths)")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="softmax temperature for --top-k > 1")
     ap.add_argument("--byz-sigma", type=float, default=50.0)
     ap.add_argument("--attack", default="persistent",
                     choices=["persistent", "intermittent", "colluding"],
@@ -255,7 +266,8 @@ def main():
         attack_placement=args.attack_placement,
         quarantine=args.quarantine, probation_ms=args.probation_ms,
         scheme=args.scheme, continuous=args.continuous,
-        pool_groups=args.pool_groups)
+        pool_groups=args.pool_groups, top_k=args.top_k,
+        temperature=args.temperature)
 
 
 if __name__ == "__main__":

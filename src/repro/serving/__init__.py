@@ -20,6 +20,7 @@ from repro.serving.metrics import (RequestRecord, ServingMetrics,
                                    summarize_latencies)
 from repro.serving.quarantine import (QuarantineConfig, QuarantineEvent,
                                       WorkerReputation)
+from repro.serving.sampling import SampleConfig, sample_tokens
 from repro.serving.scheduler import (CodedLLMExecutor, CodedScheduler,
                                      EngineExecutor, LocateReport,
                                      SchedulerConfig, poisson_arrivals)
@@ -38,4 +39,4 @@ __all__ = ["CodedServingState", "coded_prefill", "coded_decode_step",
            "summarize_latencies", "QuarantineConfig", "QuarantineEvent",
            "WorkerReputation", "CodedLLMExecutor", "CodedScheduler",
            "EngineExecutor", "LocateReport", "SchedulerConfig",
-           "poisson_arrivals"]
+           "poisson_arrivals", "SampleConfig", "sample_tokens"]

@@ -20,11 +20,12 @@ import jax.numpy as jnp
 
 from repro.core import berrut
 from repro.core.berrut import CodingConfig
-from repro.core.error_locator import locate_groups, vote_coordinates
+from repro.core.error_locator import gather_vote_values, locate_groups
 from repro.kernels import ops
 from repro.models import decode_step, embed_inputs, init_caches, prefill
 from repro.models.config import ModelConfig
 from repro.models.partitioning import shard
+from repro.serving.sampling import SampleConfig, sample_tokens
 
 
 def num_padded_streams(coding: CodingConfig, groups: int) -> int:
@@ -61,17 +62,6 @@ def _real_streams(coding: CodingConfig, coded_logits: jnp.ndarray,
     return coded_logits[: groups * coding.num_workers]
 
 
-def _decode_logits(coding: CodingConfig, coded_logits: jnp.ndarray,
-                   avail: jnp.ndarray) -> jnp.ndarray:
-    """(G*(N+1), V) + (N+1,) mask -> (G*K, V) via Berrut decode."""
-    v = coded_logits.shape[-1]
-    g = coded_logits.shape[0] // coding.num_workers
-    grouped = coded_logits.reshape(g, coding.num_workers, v)
-    w = berrut.decode_matrix(coding, avail).astype(coded_logits.dtype)
-    out = ops.berrut_apply(w, grouped)                    # (G, K, V)
-    return out.reshape(g * coding.k, v)
-
-
 def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
            avail: jnp.ndarray
            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -80,6 +70,9 @@ def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
     Shares ``core.error_locator.locate_groups`` with the engine's jitted
     ``locate_and_decode``, so the offline serving steps and the online
     scheduler locate bit-identically given the same logits and mask.
+    The vote coordinates are gathered from the raw block BEFORE the
+    float32 upcast (``gather_vote_values``): only the (G, N+1, C_vote)
+    slice is ever cast, never a full copy of the coded-logit block.
 
     coded_logits: (G*(N+1), V).  Returns (per-group decode masks (G, N+1),
     located (G, N+1) bool, votes (G, N+1) int32); with E == 0 the masks
@@ -90,11 +83,10 @@ def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
         masks = jnp.broadcast_to(avail, (g, coding.num_workers))
         zeros = jnp.zeros((g, coding.num_workers), jnp.int32)
         return masks, zeros.astype(bool), zeros
-    grouped = coded_logits.reshape(g, coding.num_workers, -1)
-    grouped = grouped.astype(jnp.float32)
-    coords = vote_coordinates(grouped.shape[-1], coding.c_vote)
+    vals = gather_vote_values(
+        coded_logits.reshape(g, coding.num_workers, -1), coding.c_vote)
     betas = jnp.asarray(coding.betas, jnp.float32)
-    located, votes = locate_groups(betas, grouped[:, :, coords], avail,
+    located, votes = locate_groups(betas, vals, avail,
                                    k=coding.k, e=coding.e)
     masks = avail[None, :] * (1.0 - located.astype(avail.dtype))
     return masks, located, votes
@@ -119,19 +111,6 @@ def _corrupt_logits(coding: CodingConfig, coded_logits: jnp.ndarray,
     return coded_logits + sigma * per_stream[:, None] * noise
 
 
-def _decode_logits_per_group(coding: CodingConfig, coded_logits, masks):
-    v = coded_logits.shape[-1]
-    g = coded_logits.shape[0] // coding.num_workers
-    grouped = coded_logits.reshape(g, coding.num_workers, v)
-
-    def dec(group, m):
-        w = berrut.decode_matrix(coding, m).astype(group.dtype)
-        return ops.berrut_apply(w, group)
-
-    out = jax.vmap(dec)(grouped, masks)
-    return out.reshape(g * coding.k, v)
-
-
 # Trace-time side effects: incremented once per jit compilation of the
 # coded serving steps (legacy batch-scoped or slot-pool continuous) — the
 # compile-count guards in tests assert a whole serving run traces prefill
@@ -151,17 +130,47 @@ class CodedServingState:
 
 def _finish_round(coding: CodingConfig, coded_logits: jnp.ndarray,
                   straggler_mask: Optional[jnp.ndarray], with_report: bool):
-    """Shared tail of every coded round: locate -> exclude -> decode."""
+    """Shared tail of every coded round: locate -> exclude -> decode,
+    fused (DESIGN.md §11).
+
+    The pre-fused path paid for the (G, N+1, V) coded-logit block three
+    times: a full float32 upcast materialised just so the locator could
+    read C_vote strided columns of it, (G, K, N+1) per-group decode
+    matrices built in XLA and round-tripped through memory, and a
+    separate vmapped contraction.  Now the locator reads the strided
+    vote columns straight off the raw block (``gather_vote_values``,
+    cast AFTER the gather) and the decode is one
+    ``ops.fused_group_decode`` pass — per-group survivor-weight matrix
+    construction fused into the contraction (in VMEM on the TPU kernel
+    path), masks straight from the gated locator verdicts.
+    """
     avail = (straggler_mask if straggler_mask is not None
              else jnp.ones((coding.num_workers,), jnp.float32))
+    v = coded_logits.shape[-1]
+    g = coded_logits.shape[0] // coding.num_workers
+    # ONE locate definition: the same ``locate`` the offline verifiers
+    # call produces the per-group exclusion masks the fused decode eats
     masks, located, votes = locate(coding, coded_logits, avail)
-    if coding.e == 0:
-        logits = _decode_logits(coding, coded_logits, avail)
-    else:
-        logits = _decode_logits_per_group(coding, coded_logits, masks)
+    grouped = coded_logits.reshape(g, coding.num_workers, v)
+    logits = ops.fused_group_decode(
+        grouped, masks.astype(jnp.float32),
+        jnp.asarray(coding.alphas, jnp.float32),
+        jnp.asarray(coding.betas, jnp.float32))
+    logits = logits.reshape(g * coding.k, v)
     if with_report:
         return logits, (located, votes)
     return logits, None
+
+
+def _maybe_sample(logits: jnp.ndarray, sample: Optional[SampleConfig],
+                  sample_rng: Optional[jax.Array]) -> jnp.ndarray:
+    """On-device token selection (DESIGN.md §11): with a ``SampleConfig``
+    the step returns (G*K,) int32 token ids instead of (G*K, V) logits,
+    so the round loop's device->host transfer shrinks by a factor of V
+    and the host bookkeeping overlaps the next dispatched round."""
+    if sample is None:
+        return logits
+    return sample_tokens(logits, sample, sample_rng)
 
 
 def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
@@ -171,14 +180,17 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                   byz_mask: Optional[jnp.ndarray] = None,
                   byz_rng: Optional[jax.Array] = None,
                   byz_sigma: float = 10.0, byz_collude: bool = False,
-                  with_report: bool = False):
+                  with_report: bool = False,
+                  sample: Optional[SampleConfig] = None,
+                  sample_rng: Optional[jax.Array] = None):
     """Prefill G*K real prompts as G*(N+1) coded streams.
 
     inputs: modality dict with leading batch = G*K real queries.
     Byzantine workers (``byz_mask``) corrupt their prefill logits exactly
     like a decode step's — the adversary does not wait for decode rounds.
-    Returns (decoded last-token logits (G*K, V), serving state); with
-    ``with_report`` also the (located, votes) pair of the vote-gated
+    Returns (decoded last-token logits (G*K, V) — or, with ``sample``,
+    on-device-sampled (G*K,) int32 token ids — and the serving state);
+    with ``with_report`` also the (located, votes) pair of the vote-gated
     locator for reputation tracking.
     """
     global CODED_PREFILL_TRACES
@@ -197,11 +209,12 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                                        byz_rng, byz_sigma, byz_collude)
     logits, report = _finish_round(coding, coded_logits, straggler_mask,
                                    with_report)
+    out = _maybe_sample(logits, sample, sample_rng)
     state = CodedServingState(caches=caches,
                               pos=jnp.asarray(s, jnp.int32))
     if with_report:
-        return logits, state, report
-    return logits, state
+        return out, state, report
+    return out, state
 
 
 def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
@@ -210,7 +223,9 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
                       byz_mask: Optional[jnp.ndarray] = None,
                       byz_rng: Optional[jax.Array] = None,
                       byz_sigma: float = 10.0, byz_collude: bool = False,
-                      with_report: bool = False):
+                      with_report: bool = False,
+                      sample: Optional[SampleConfig] = None,
+                      sample_rng: Optional[jax.Array] = None):
     """One coded decode step.
 
     tokens: (G*K, 1) int32 — the sampled next token of each REAL stream.
@@ -218,8 +233,9 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
     embeddings appended to the coded caches (DESIGN.md §5).  With
     ``byz_collude`` every Byzantine worker in a group adds the SAME noise
     (the colluding adversary of ``serving.failures``).
-    Returns (decoded logits (G*K, V), new state); with ``with_report``
-    also the locator's (located, votes).
+    Returns (decoded logits (G*K, V) — or sampled (G*K,) token ids with
+    ``sample`` — and the new state); with ``with_report`` also the
+    locator's (located, votes).
     """
     global CODED_DECODE_STEP_TRACES
     CODED_DECODE_STEP_TRACES += 1
@@ -236,10 +252,11 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
                                        byz_rng, byz_sigma, byz_collude)
     logits, report = _finish_round(coding, coded_logits, straggler_mask,
                                    with_report)
+    out = _maybe_sample(logits, sample, sample_rng)
     new_state = CodedServingState(caches=caches, pos=state.pos + 1)
     if with_report:
-        return logits, new_state, report
-    return logits, new_state
+        return out, new_state, report
+    return out, new_state
 
 
 # --------------------------------------------------------- slot pool (§10)
@@ -336,7 +353,9 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                        byz_mask: Optional[jnp.ndarray] = None,
                        byz_rng: Optional[jax.Array] = None,
                        byz_sigma: float = 10.0, byz_collude: bool = False,
-                       with_report: bool = False):
+                       with_report: bool = False,
+                       sample: Optional[SampleConfig] = None,
+                       sample_rng: Optional[jax.Array] = None):
     """Prefill admitted group slots INTO the persistent pool.
 
     inputs: modality dict with leading batch = pool_groups*K query rows
@@ -347,8 +366,12 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     what makes mid-flight admission trace-free); only admitted slots'
     caches are merged into the pool, everyone else's state is untouched.
     Returns (decoded last-token logits (pool_groups*K, V) with
-    non-admitted rows zeroed, new state); with ``with_report`` also the
-    admit-masked (located, votes) locator pair.
+    non-admitted rows zeroed — or, with ``sample``, (pool_groups*K,)
+    int32 token ids sampled on device from the zeroed logits — and the
+    new state); with ``with_report`` also the admit-masked (located,
+    votes) locator pair.  When the caller jits this with ``state``
+    donated (DESIGN.md §11), the pool caches are updated in place and
+    the donated ``state`` must not be touched again after the call.
     """
     global CODED_PREFILL_TRACES
     CODED_PREFILL_TRACES += 1
@@ -370,10 +393,11 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                                        byz_rng, byz_sigma, byz_collude)
     logits, report = _finish_pool_round(coding, coded_logits, admit_mask,
                                         straggler_mask, with_report)
+    out = _maybe_sample(logits, sample, sample_rng)
     new_state = CodedPoolState(caches=caches, pos=new_pos)
     if with_report:
-        return logits, new_state, report
-    return logits, new_state
+        return out, new_state, report
+    return out, new_state
 
 
 def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
@@ -384,7 +408,9 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
                            byz_rng: Optional[jax.Array] = None,
                            byz_sigma: float = 10.0,
                            byz_collude: bool = False,
-                           with_report: bool = False):
+                           with_report: bool = False,
+                           sample: Optional[SampleConfig] = None,
+                           sample_rng: Optional[jax.Array] = None):
     """One decode round over the WHOLE pool.
 
     tokens: (pool_groups*K, 1) int32 — the sampled next token of every
@@ -393,8 +419,10 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
     (``decode_step`` takes the per-stream position vector); only active
     slots advance ``pos``, so a free slot harmlessly rewrites one cache
     entry until its next admission overwrites it wholesale.  Returns
-    (decoded logits (pool_groups*K, V) with inactive rows zeroed, new
-    state); with ``with_report`` also the active-masked (located, votes).
+    (decoded logits (pool_groups*K, V) with inactive rows zeroed — or
+    sampled (pool_groups*K,) token ids with ``sample`` — and the new
+    state); with ``with_report`` also the active-masked (located,
+    votes).  Donation contract as in ``coded_pool_prefill``.
     """
     global CODED_DECODE_STEP_TRACES
     CODED_DECODE_STEP_TRACES += 1
@@ -418,8 +446,9 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
                                        byz_rng, byz_sigma, byz_collude)
     logits, report = _finish_pool_round(coding, coded_logits, active_mask,
                                         straggler_mask, with_report)
+    out = _maybe_sample(logits, sample, sample_rng)
     new_pos = state.pos + (active_mask > 0).astype(jnp.int32)
     new_state = CodedPoolState(caches=caches, pos=new_pos)
     if with_report:
-        return logits, new_state, report
-    return logits, new_state
+        return out, new_state, report
+    return out, new_state

@@ -54,6 +54,7 @@ from repro.serving.failures import (AdversaryConfig, RoundAttack,
 from repro.serving.latency import LatencyModel
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.quarantine import QuarantineConfig, WorkerReputation
+from repro.serving.sampling import SampleConfig
 from repro.serving.scheduler import (LocateReport, derive_seed_streams,
                                      resolve_arrivals, round_ground_truth)
 
@@ -120,10 +121,21 @@ class ContinuousLLMExecutor:
     structure (and therefore the compiled program) never changes;
     ``byz_collude`` is the one static — it must match the adversary's
     behavior model for the run.
+
+    Perf contract (DESIGN.md §11): the ``CodedPoolState`` argument is
+    DONATED to both jit programs, so XLA updates the pool KV caches in
+    place instead of double-allocating the whole pool every round —
+    callers must treat the state they passed in as consumed and only
+    ever use the returned one.  Token selection runs on device
+    (``SampleConfig``; greedy by default): ``prefill``/``decode``
+    return (pool_groups*K,) int32 token ids, not (pool_groups*K, V)
+    logits.
     """
 
     def __init__(self, model_cfg, coding, params, pool_groups: int,
-                 max_len: int, byz_collude: bool = False):
+                 max_len: int, byz_collude: bool = False,
+                 sample: Optional[SampleConfig] = None,
+                 sample_seed: int = 0):
         self.scheme = as_scheme(coding)
         if not isinstance(self.scheme, BerrutScheme):
             raise TypeError("ContinuousLLMExecutor drives the jitted "
@@ -136,20 +148,33 @@ class ContinuousLLMExecutor:
         self.pool_groups = pool_groups
         self.max_len = max_len
         self.byz_collude = byz_collude
+        self.sample = sample if sample is not None else SampleConfig()
+        self._key = jax.random.PRNGKey(sample_seed)
+        sample_cfg = self.sample
         self._prefill = jax.jit(
-            lambda p, st, t, a, m, bm, br, bs: coded_pool_prefill(
+            lambda p, st, t, a, m, bm, br, bs, sr: coded_pool_prefill(
                 model_cfg, coding, p, st, {"tokens": t}, max_len, a,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
-                byz_collude=byz_collude, with_report=True))
+                byz_collude=byz_collude, with_report=True,
+                sample=sample_cfg, sample_rng=sr),
+            donate_argnums=(1,))
         self._decode = jax.jit(
-            lambda p, st, t, a, m, bm, br, bs: coded_pool_decode_step(
+            lambda p, st, t, a, m, bm, br, bs, sr: coded_pool_decode_step(
                 model_cfg, coding, p, st, t, a,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
-                byz_collude=byz_collude, with_report=True))
+                byz_collude=byz_collude, with_report=True,
+                sample=sample_cfg, sample_rng=sr),
+            donate_argnums=(1,))
 
     def init_state(self):
         return init_pool_state(self.model_cfg, self.coding,
                                self.pool_groups, self.max_len)
+
+    def _next_rng(self) -> jax.Array:
+        """Per-round sampling key (unused by the greedy default, but
+        always passed so the jit signature never changes)."""
+        self._key, sub = jax.random.split(self._key)
+        return sub
 
     def _byz_args(self, attack: Optional[RoundAttack]):
         """Constant-structure Byzantine args: a clean round is a
@@ -178,21 +203,25 @@ class ContinuousLLMExecutor:
 
     def prefill(self, state, prompts: np.ndarray, admit_mask: np.ndarray,
                 mask: np.ndarray, attack: Optional[RoundAttack] = None):
+        """Consumes ``state`` (donated); returns ((P*K,) int32 sampled
+        token ids, new state, locate report)."""
         bm, br, bs = self._byz_args(attack)
-        logits, state, report = self._prefill(
+        tokens, state, report = self._prefill(
             self.params, state, jnp.asarray(prompts, jnp.int32),
             jnp.asarray(admit_mask, jnp.float32),
-            jnp.asarray(mask, jnp.float32), bm, br, bs)
-        return np.asarray(logits), state, self._report(mask, report)
+            jnp.asarray(mask, jnp.float32), bm, br, bs, self._next_rng())
+        return np.asarray(tokens), state, self._report(mask, report)
 
     def decode(self, state, tokens: np.ndarray, active_mask: np.ndarray,
                mask: np.ndarray, attack: Optional[RoundAttack] = None):
+        """Consumes ``state`` (donated); returns ((P*K,) int32 sampled
+        token ids, new state, locate report)."""
         bm, br, bs = self._byz_args(attack)
-        logits, state, report = self._decode(
+        toks, state, report = self._decode(
             self.params, state, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(active_mask, jnp.float32),
-            jnp.asarray(mask, jnp.float32), bm, br, bs)
-        return np.asarray(logits), state, self._report(mask, report)
+            jnp.asarray(mask, jnp.float32), bm, br, bs, self._next_rng())
+        return np.asarray(toks), state, self._report(mask, report)
 
 
 class ContinuousScheduler:
@@ -420,20 +449,20 @@ class ContinuousScheduler:
         if admitted:
             admit_mask = np.zeros((pool,), np.float32)
             admit_mask[[g.slot for g in admitted]] = 1.0
-            logits, self._state, report = self.executor.prefill(
+            tokens, self._state, report = self.executor.prefill(
                 self._state, self._prompt_buf, admit_mask, mask, attack)
             reports.append((report, admit_mask))
             for g in admitted:
                 g.prefilled = True
-                self._emit(g, logits, t, first=True)
+                self._emit(g, tokens, t, first=True)
         if active:
             act_mask = np.zeros((pool,), np.float32)
             act_mask[[g.slot for g in active]] = 1.0
-            logits, self._state, report = self.executor.decode(
+            tokens, self._state, report = self.executor.decode(
                 self._state, self._token_buf, act_mask, mask, attack)
             reports.append((report, act_mask))
             for g in active:
-                self._emit(g, logits, t, first=False)
+                self._emit(g, tokens, t, first=False)
         self._observe(t, mask, attack, reports)
         for g in admitted + active:
             if g.done.all() and self._slots[g.slot] is g:
@@ -444,13 +473,16 @@ class ContinuousScheduler:
         self._round_idx += 1
         self._try_start_round(t)
 
-    def _emit(self, group: SlotGroup, logits: np.ndarray, t: float,
+    def _emit(self, group: SlotGroup, tokens: np.ndarray, t: float,
               first: bool) -> None:
-        """Sample this round's token column for one group; retire
-        requests that hit their budget or EOS."""
+        """Consume this round's on-device-sampled token column for one
+        group; retire requests that hit their budget or EOS.  ``tokens``
+        is the (pool_groups*K,) int32 id vector the executor returned —
+        token selection already happened inside the jitted step, so the
+        only per-round device->host traffic is this id vector."""
         k = self.scheme.k
         rows = slice(group.slot * k, (group.slot + 1) * k)
-        toks = np.argmax(logits[rows], axis=-1).astype(np.int32)
+        toks = tokens[rows].astype(np.int32)
         live = ~group.done                       # before this round's token
         self._token_buf[rows, 0] = toks
         eos = self.config.eos_token_id

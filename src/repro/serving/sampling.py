@@ -1,0 +1,56 @@
+"""On-device token sampling for the jitted coded serving steps.
+
+The round loops used to pull the full decoded (P*K, V) logit block to
+the host every round just to ``np.argmax`` it — at V = 32k vocab that
+device->host transfer is orders of magnitude larger than the (P*K,)
+int32 token ids the scheduler actually needs, and it serialises the host
+event loop against the device.  ``sample_tokens`` runs greedy / top-k
+selection INSIDE the jitted step, so a round returns token ids and the
+host bookkeeping overlaps with the next dispatched round.
+
+``SampleConfig`` is a frozen (hashable) dataclass: it is baked into the
+trace like ``CodingConfig``, so flipping greedy -> top-k is a retrace,
+not a runtime branch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleConfig:
+    """top_k == 1 is greedy decoding (no randomness, rng unused);
+    top_k > 1 samples from the temperature-scaled top-k logits."""
+
+    top_k: int = 1
+    temperature: float = 1.0
+
+    def __post_init__(self):
+        if self.top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {self.top_k}")
+        if self.temperature <= 0.0:
+            raise ValueError(
+                f"temperature must be > 0, got {self.temperature}")
+
+
+def sample_tokens(logits: jnp.ndarray, config: SampleConfig,
+                  rng: Optional[jax.Array] = None) -> jnp.ndarray:
+    """(..., V) logits -> (...,) int32 token ids, on device.
+
+    Greedy (top_k == 1) is deterministic argmax — ties break to the
+    lowest index, matching ``np.argmax`` on the host path it replaces.
+    """
+    if config.top_k <= 1:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if rng is None:
+        raise ValueError("top_k > 1 sampling needs an rng key")
+    vals, idx = jax.lax.top_k(logits.astype(jnp.float32), config.top_k)
+    choice = jax.random.categorical(rng, vals / config.temperature,
+                                    axis=-1)
+    return jnp.take_along_axis(
+        idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)

@@ -58,6 +58,7 @@ from repro.serving.failures import (AdversaryConfig, RoundAttack,
 from repro.serving.latency import LatencyModel
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.quarantine import QuarantineConfig, WorkerReputation
+from repro.serving.sampling import SampleConfig
 
 # Event kinds; the numeric order breaks timestamp ties: a batch-filling
 # arrival dispatches before a flush deadline at the same instant, and a
@@ -249,7 +250,14 @@ class CodedLLMExecutor:
     round's straggler mask is the event-derived one for that round, and
     every round's ``RoundAttack`` (if any) corrupts the compromised
     workers' coded logits INSIDE the jitted step before the in-program
-    locator runs.  Returns the greedy-decoded token matrix (B, steps + 1).
+    locator runs.  Returns the sampled token matrix (B, steps + 1):
+    token selection happens ON DEVICE inside the jitted step
+    (``SampleConfig``; greedy by default), so a round transfers (B,)
+    int32 ids instead of (B, V) logits and the next round's input tokens
+    never leave the device.  The ``CodedServingState`` is donated to the
+    decode-step program — each round updates the coded KV caches in
+    place (DESIGN.md §11) — so a handle's previous state is consumed by
+    ``step``/``decode`` and must not be reused.
 
     Note: partial (deadline-flushed) batches change the jitted batch
     shape and recompile.  This run-to-completion executor is kept as the
@@ -261,7 +269,8 @@ class CodedLLMExecutor:
     supports_speculation = False
 
     def __init__(self, model_cfg, coding, params, steps: int,
-                 max_len: int, seed: int = 0):
+                 max_len: int, seed: int = 0,
+                 sample: Optional[SampleConfig] = None):
         from repro.core.scheme import BerrutScheme
         from repro.serving.coded_serving import (coded_decode_step,
                                                  coded_prefill)
@@ -274,18 +283,22 @@ class CodedLLMExecutor:
         self.coding = coding
         self.params = params
         self.rounds = 1 + steps
+        self.sample = sample if sample is not None else SampleConfig()
+        self._key = jax.random.PRNGKey(seed)
+        sample_cfg = self.sample
         self._prefill = jax.jit(
-            lambda p, t, m, bm, br, bs, collude: coded_prefill(
+            lambda p, t, m, bm, br, bs, sr, collude: coded_prefill(
                 model_cfg, coding, p, {"tokens": t}, max_len=max_len,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
-                byz_collude=collude, with_report=True),
-            static_argnums=(6,))
+                byz_collude=collude, with_report=True,
+                sample=sample_cfg, sample_rng=sr),
+            static_argnums=(7,))
         self._decode = jax.jit(
-            lambda p, st, t, m, bm, br, bs, collude: coded_decode_step(
+            lambda p, st, t, m, bm, br, bs, sr, collude: coded_decode_step(
                 model_cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm,
                 byz_rng=br, byz_sigma=bs, byz_collude=collude,
-                with_report=True),
-            static_argnums=(7,))
+                with_report=True, sample=sample_cfg, sample_rng=sr),
+            static_argnums=(8,), donate_argnums=(1,))
 
     @staticmethod
     def _byz_args(attack: Optional[RoundAttack]):
@@ -294,9 +307,13 @@ class CodedLLMExecutor:
         return (jnp.asarray(attack.mask), attack.key,
                 jnp.asarray(attack.sigma, jnp.float32), attack.collude)
 
+    def _next_rng(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
     def dispatch(self, queries) -> dict:
         return {"tokens": jnp.asarray(queries, jnp.int32),
-                "state": None, "logits": None, "outs": [], "round": 0}
+                "state": None, "next": None, "outs": [], "round": 0}
 
     def _round(self, handle, round_idx: int, mask: np.ndarray,
                attack: Optional[RoundAttack]):
@@ -312,14 +329,17 @@ class CodedLLMExecutor:
         m = jnp.asarray(mask, jnp.float32)
         bm, br, bs, collude = self._byz_args(attack)
         if round_idx == 0:
-            logits, state, report = self._prefill(
-                self.params, handle["tokens"], m, bm, br, bs, collude)
+            toks, state, report = self._prefill(
+                self.params, handle["tokens"], m, bm, br, bs,
+                self._next_rng(), collude)
         else:
-            nxt = jnp.argmax(handle["logits"], -1)[:, None]
-            logits, state, report = self._decode(
-                self.params, handle["state"], nxt, m, bm, br, bs, collude)
-        handle["logits"], handle["state"] = logits, state
-        handle["outs"].append(np.asarray(jnp.argmax(logits, -1)))
+            # handle["state"] is donated to the step: the caches update
+            # in place and the old state object is consumed here
+            toks, state, report = self._decode(
+                self.params, handle["state"], handle["next"], m, bm, br,
+                bs, self._next_rng(), collude)
+        handle["next"], handle["state"] = toks[:, None], state
+        handle["outs"].append(np.asarray(toks))
         if self.coding.e > 0:
             located, votes = report
             g = located.shape[0]

@@ -1,0 +1,160 @@
+"""Adaptive (N, E, wait_for) redundancy vs static provisioning under
+production traffic (DESIGN.md §12, EXPERIMENTS.md §10).
+
+The closed-loop question the paper leaves open: ApproxIFER provisions
+redundancy statically for the worst case, but production traffic is
+diurnal + bursty, stragglers come and go with load, adversaries attack
+in campaigns, and workers churn.  Three policies serve the SAME
+arrival trace (``trace_arrivals``: diurnal sinusoid x Poisson burst
+onsets), the same worker-latency stream, the same churn timeline, and
+the same persistent 2-adversary attack:
+
+  * ``static_lean`` — the paper's §4 operating point (K=4, S=1, E=1),
+    11 workers always.  Cheap, but E=1 under a 2-adversary campaign
+    lets corruption through.
+  * ``static_max``  — worst-case provisioning (K=4, S=2, E=2), 14
+    workers always.  Robust, but pays the full coded overhead around
+    the clock.
+  * ``adaptive``    — ``RedundancyController`` starting at the lean
+    point, bounds S in [0, 2], E in [0, 2]: grows E when the locator
+    confirms attacks, grows S when the tail fattens, shrinks when calm.
+
+Reported per cell: end-to-end p50/p99, corrupted-decode rate, decoded
+top-1 agreement with the clean model, mean provisioned workers per
+round (the redundancy cost axis), degraded rounds, and the controller's
+decision count.  The claim under test: adaptive matches static_max's
+corrupted-decode rate at near static_lean's mean worker cost, with
+equal-or-better p99 than static_lean (whose quorum is cheaper but whose
+attack rounds corrupt).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+K, SIGMA = 4, 80.0
+LEAN_S, LEAN_E = 1, 1
+MAX_S, MAX_E = 2, 2
+
+
+def _predict():
+    rng = np.random.RandomState(0)
+    w1 = jnp.asarray(rng.randn(16, 64) / 4.0, jnp.float32)
+    w2 = jnp.asarray(rng.randn(64, 10) / 8.0, jnp.float32)
+    return jax.jit(lambda x: jax.nn.tanh(x @ w1) @ w2)
+
+
+def _serve(f, scheme, payloads, arrivals, controller=None, churn=None,
+           seed=0):
+    from repro.serving import (AdversaryConfig, CodedScheduler,
+                               EngineExecutor, LatencyModel,
+                               QuarantineConfig, SchedulerConfig)
+    cfg = SchedulerConfig(
+        scheme=scheme, groups_per_batch=1, flush_deadline_ms=6.0,
+        seed=seed, controller=controller, churn=churn,
+        adversary=AdversaryConfig(kind="persistent", attack_rate=0.5,
+                                  num_adversaries=2, sigma=SIGMA, seed=3),
+        quarantine=QuarantineConfig(probation_ms=30.0))
+    sched = CodedScheduler(cfg, LatencyModel(tail_prob=0.15),
+                           EngineExecutor(f, scheme))
+    metrics = sched.run(payloads, arrival_ms=arrivals)
+    uids = sorted(sched.results)
+    served = np.stack([sched.results[u] for u in uids])
+    clean = np.asarray(f(jnp.asarray(np.stack(payloads))))
+    agree = float(np.mean(np.argmax(served, -1) == np.argmax(clean, -1)))
+    # redundancy cost: mean provisioned workers per coded round
+    widths = [b.dispatch_plan.num_workers for b in sched.batches
+              for _ in b.round_masks]
+    mean_workers = float(np.mean(widths)) if widths else 0.0
+    return sched, metrics, agree, mean_workers
+
+
+def _cell(emit, out, tag, agree, mean_workers, metrics, decisions=0):
+    s = metrics.summary()
+    out[tag] = {"agreement": agree, "mean_workers": mean_workers,
+                "decisions": decisions, **s}
+    emit(f"fig_adaptive_redundancy/{tag}", 0.0,
+         f"p99={s['p99_ms']:.1f}ms;agreement={agree:.4f};"
+         f"corrupted_decode_rate="
+         f"{s.get('corrupted_decode_rate', 0.0):.3f};"
+         f"mean_workers={mean_workers:.1f};"
+         f"degraded={s.get('degraded_rounds', 0):.0f};"
+         f"decisions={decisions:.0f}")
+
+
+def run(emit=None):
+    from benchmarks import common
+    from repro.core.scheme import get_scheme
+    from repro.serving import (ChurnModel, ControllerConfig,
+                               RedundancyController, TrafficModel,
+                               trace_arrivals)
+    if emit is None:
+        emit = common.emit
+    n_requests = common.scaled(480, 96)
+    f = _predict()
+    # arrival timescale must exceed the ~10ms round time or every batch
+    # dispatches at the initial operating point before the first retune
+    traffic = TrafficModel(base_rate_rps=400.0,
+                           diurnal_period_ms=250.0, diurnal_amp=0.6,
+                           burst_rate_per_s=8.0, burst_duration_ms=30.0,
+                           burst_rate_mult=4.0)
+    arrivals = trace_arrivals(n_requests, traffic, seed=11)
+    rng = np.random.RandomState(7)
+    payloads = [rng.randn(16).astype(np.float32)
+                for _ in range(n_requests)]
+    churn = ChurnModel(mean_up_ms=800.0, mean_down_ms=30.0, seed=5)
+
+    out = {}
+    for tag, s, e in (("static_lean", LEAN_S, LEAN_E),
+                      ("static_max", MAX_S, MAX_E)):
+        scheme = get_scheme("berrut", K, s=s, e=e)
+        _, metrics, agree, mean_w = _serve(f, scheme, payloads, arrivals,
+                                           churn=churn)
+        _cell(emit, out, tag, agree, mean_w, metrics)
+
+    scheme = get_scheme("berrut", K, s=LEAN_S, e=LEAN_E)
+    ctrl = RedundancyController(scheme, ControllerConfig(
+        window_rounds=4, s_min=0, s_max=MAX_S, e_min=0, e_max=MAX_E,
+        straggle_ms=40.0, clean_windows_to_shrink=2))
+    _, metrics, agree, mean_w = _serve(f, scheme, payloads, arrivals,
+                                       controller=ctrl, churn=churn)
+    _cell(emit, out, "adaptive", agree, mean_w, metrics,
+          decisions=len(ctrl.decisions) - 1)
+    out["adaptive"]["decision_log"] = [
+        list(d) for d in ctrl.decision_log()]
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shapes mode (REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the policy comparison as JSON (the "
+                         "bench-smoke regression gate reads this)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # must precede the benchmarks.common import inside run()
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    out = run()
+    if args.json:
+        path = os.path.abspath(args.json)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump({"smoke": args.smoke, "schema": 1, "policies": out},
+                      fh, indent=1)
+
+
+if __name__ == "__main__":
+    # support direct path execution
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

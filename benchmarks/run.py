@@ -53,7 +53,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_coded_round, bench_kernels, fig_acc_archs,
                             fig_acc_trained_lm, fig_acc_vs_e,
-                            fig_acc_vs_k, fig_acc_vs_s, fig_byzantine_serving,
+                            fig_acc_vs_k, fig_acc_vs_s,
+                            fig_adaptive_redundancy, fig_byzantine_serving,
                             fig_scheme_faceoff, fig_sigma,
                             fig_cvote_ablation, fig_systematic,
                             fig_tail_latency, roofline_table,
@@ -72,6 +73,8 @@ def main(argv=None) -> None:
         ("fig_cvote_ablation (DESIGN §3 adaptation)", fig_cvote_ablation),
         ("fig_byzantine_serving (DESIGN §8 attack sweep)",
          fig_byzantine_serving),
+        ("fig_adaptive_redundancy (DESIGN §12 closed loop)",
+         fig_adaptive_redundancy),
         ("fig_scheme_faceoff (paper Figs 3/5/6 + §1 overhead, one sweep)",
          fig_scheme_faceoff),
         ("table_overhead (paper §1/§4)", table_overhead),

@@ -21,6 +21,8 @@ uncoded wait-for-all baseline.
       --attack colluding --attack-rate 0.5 --quarantine
   PYTHONPATH=src python examples/serve_coded_llm.py --rate 500 --slo-ms 40
   PYTHONPATH=src python examples/serve_coded_llm.py --scheme replication
+  PYTHONPATH=src python examples/serve_coded_llm.py --e 1 --adaptive \
+      --churn --traffic diurnal --attack intermittent --attack-rate 0.3
 
 Any registered redundancy scheme (--scheme berrut|parm|replication|
 uncoded) serves through the same event loop; non-Berrut schemes serve
@@ -30,6 +32,12 @@ single-shot next-token prediction over embeddings (DESIGN.md §9).
 fixed coded-KV slot pool (--pool-groups slots, DESIGN.md §10): groups
 join at prefill mid-flight, requests retire at per-request generation
 budgets, and the whole run traces prefill/decode-step exactly once.
+
+--adaptive closes the loop (DESIGN.md §12): a RedundancyController
+watches per-window straggler/attack rates and retunes (N, E, wait_for)
+between batches, never dropping the decode wait-for below the locator
+quorum.  --churn adds worker leave/rejoin; --traffic diurnal swaps the
+Poisson arrivals for a diurnal + bursty trace around --rate.
 """
 
 import argparse
@@ -65,6 +73,14 @@ def main():
     ap.add_argument("--quarantine", action="store_true",
                     help="quarantine repeatedly-located workers")
     ap.add_argument("--probation-ms", type=float, default=200.0)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="closed-loop (N, E, wait_for) retuning between "
+                         "batches (DESIGN.md §12)")
+    ap.add_argument("--churn", action="store_true",
+                    help="workers leave/rejoin on exponential clocks")
+    ap.add_argument("--traffic", default="poisson",
+                    choices=["poisson", "diurnal"],
+                    help="arrival process (diurnal = bursty trace)")
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="Poisson arrival rate, requests/second")
     ap.add_argument("--deadline-ms", type=float, default=5.0,
@@ -81,7 +97,8 @@ def main():
               attack_placement=args.attack_placement,
               quarantine=args.quarantine, probation_ms=args.probation_ms,
               scheme=args.scheme, continuous=args.continuous,
-              pool_groups=args.pool_groups)
+              pool_groups=args.pool_groups, adaptive=args.adaptive,
+              churn=args.churn, traffic=args.traffic)
 
 
 if __name__ == "__main__":

@@ -21,11 +21,15 @@ import json
 import sys
 
 # Latency fields gated per cell: only the SHIPPED paths (the fused
-# tail, the encode contraction, the end-to-end round).  The pre-PR
-# baseline and sub-phase timings stay informational — absolute timings
-# on shared boxes burst 2-3x (EXPERIMENTS.md §9), so gating every raw
-# field would make the job flaky without guarding anything users run.
-_GATED = ("fused_us", "encode_us", "round_us")
+# tail, the encode contraction, the end-to-end round) plus the
+# event-clock serving tail from the adaptive-redundancy trajectory
+# (``p99_ms`` is simulated time off fixed seeds, so it is exactly
+# reproducible — a drift there is a real scheduler change, not CI
+# noise).  The pre-PR baseline and sub-phase timings stay
+# informational — absolute timings on shared boxes burst 2-3x
+# (EXPERIMENTS.md §9), so gating every raw field would make the job
+# flaky without guarding anything users run.
+_GATED = ("fused_us", "encode_us", "round_us", "p99_ms")
 
 
 def _cells(doc):
@@ -36,6 +40,9 @@ def _cells(doc):
         # key by configuration, not list position — inserting a sweep
         # cell must never silently compare mismatched configs
         yield f"encode.k{cell.get('k')}_n{cell.get('workers')}", cell
+    # fig_adaptive_redundancy --json: one cell per serving policy
+    for key, cell in (doc.get("policies") or {}).items():
+        yield f"policies.{key}", cell
 
 
 def main(argv=None) -> int:
@@ -65,8 +72,9 @@ def main(argv=None) -> int:
                 continue
             compared += 1
             ratio = ccell[field] / max(bcell[field], 1e-9)
-            line = (f"{key}.{field}: {ccell[field]:.1f}us vs baseline "
-                    f"{bcell[field]:.1f}us ({ratio:.2f}x)")
+            unit = field.rsplit("_", 1)[-1]   # "us" / "ms" from the name
+            line = (f"{key}.{field}: {ccell[field]:.1f}{unit} vs baseline "
+                    f"{bcell[field]:.1f}{unit} ({ratio:.2f}x)")
             if ratio > args.max_ratio:
                 failures.append(line)
                 print("REGRESSION " + line)

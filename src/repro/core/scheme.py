@@ -118,6 +118,23 @@ class RedundancyScheme:
                             wait_for=self.wait_for,
                             decode_quorum=self.decode_quorum)
 
+    def with_redundancy(self, *, s: Optional[int] = None,
+                        e: Optional[int] = None) -> "RedundancyScheme":
+        """Re-plan this scheme at a different redundancy operating point.
+
+        The adaptive controller (``serving.controller``, DESIGN.md §12)
+        retunes (S, E) between batches; K — the query grouping the
+        batcher is built around — never changes.  The default rebuilds
+        through the registry, so every registered scheme re-plans the
+        same way; schemes carrying extra constructor state override this
+        to preserve it.
+        """
+        s = self.s if s is None else s
+        e = self.e if e is None else e
+        if (s, e) == (self.s, self.e):
+            return self
+        return get_scheme(self.name, self.k, s=s, e=e)
+
     # -- lifecycle -------------------------------------------------------
 
     def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
@@ -229,6 +246,15 @@ class BerrutScheme(RedundancyScheme):
     @property
     def has_locator(self) -> bool:
         return self.coding.e > 0
+
+    def with_redundancy(self, *, s: Optional[int] = None,
+                        e: Optional[int] = None) -> "BerrutScheme":
+        s = self.s if s is None else s
+        e = self.e if e is None else e
+        if (s, e) == (self.s, self.e):
+            return self
+        # preserve the non-registry knobs (systematic nodes, vote width)
+        return BerrutScheme(dataclasses.replace(self.coding, s=s, e=e))
 
     def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
         return berrut_mod.encode(self.coding, grouped, axis=1)

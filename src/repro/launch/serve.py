@@ -36,6 +36,16 @@ the whole run, partial flushes included.
       --quarantine
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --k 4 --scheme replication
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 32 --k 4 --s 1 --e 1 --adaptive --churn --traffic diurnal \
+      --attack intermittent --attack-rate 0.3 --quarantine
+
+With ``--adaptive`` a ``RedundancyController`` (DESIGN.md §12) watches
+per-window straggler/attack rates and retunes (N, E, wait_for) between
+batches, never letting the decode wait-for fall below the locator
+quorum; ``--churn`` adds worker leave/rejoin on exponential clocks and
+``--traffic diurnal`` replaces the homogeneous Poisson arrivals with a
+diurnal + bursty trace around ``--rate``.
 """
 
 from __future__ import annotations
@@ -50,11 +60,13 @@ from repro import configs
 from repro.core.scheme import get_scheme, scheme_names
 from repro.models import embed_inputs, init_params
 from repro.models import predict_fn as make_predict_fn
-from repro.serving import (AdversaryConfig, CodedLLMExecutor, CodedScheduler,
-                           ContinuousConfig, ContinuousLLMExecutor,
-                           ContinuousScheduler, EngineExecutor, LatencyModel,
-                           QuarantineConfig, SampleConfig, SchedulerConfig,
-                           percentile_table)
+from repro.serving import (AdversaryConfig, ChurnModel, CodedLLMExecutor,
+                           CodedScheduler, ContinuousConfig,
+                           ContinuousLLMExecutor, ContinuousScheduler,
+                           ControllerConfig, EngineExecutor, LatencyModel,
+                           QuarantineConfig, RedundancyController,
+                           SampleConfig, SchedulerConfig, TrafficModel,
+                           percentile_table, trace_arrivals)
 
 
 def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
@@ -65,7 +77,10 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         attack_placement: str = "random", quarantine: bool = False,
         probation_ms: float = 200.0, scheme: str = "berrut",
         continuous: bool = False, pool_groups: int = 4,
-        top_k: int = 1, temperature: float = 1.0):
+        top_k: int = 1, temperature: float = 1.0,
+        adaptive: bool = False, churn: bool = False,
+        churn_up_ms: float = 2000.0, churn_down_ms: float = 200.0,
+        traffic: str = "poisson"):
     cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(seed)
@@ -92,6 +107,16 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
     if continuous and scheme != "berrut":
         raise ValueError("--continuous drives the jitted berrut slot-pool "
                          f"path; scheme {scheme!r} serves single-shot")
+    if adaptive and continuous:
+        raise ValueError("--adaptive retunes (N, E, wait_for) per batch; "
+                         "the fixed coded-KV slot pool cannot re-plan "
+                         "(drop --continuous)")
+    if adaptive and scheme == "berrut":
+        # the jitted autoregressive executor traces its worker count in,
+        # so it cannot re-plan per batch; adaptive berrut serves the
+        # single-shot EngineExecutor path like the other schemes
+        print("adaptive: berrut serves single-shot next-token prediction "
+              "(the autoregressive executor cannot re-plan per batch)")
     # On-device token selection (DESIGN.md §11): the jitted steps return
     # (B,) int32 sampled ids, never round-tripping (B, V) logits.
     sample = SampleConfig(top_k=top_k, temperature=temperature)
@@ -100,7 +125,15 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
                                  (prompt_len,)).astype(np.int32)
                      for _ in range(requests)]
     budgets = None
-    if scheme == "berrut" and continuous:
+    if adaptive:
+        # per-batch re-planning needs the scheme-generic executor
+        f = jax.jit(make_predict_fn(cfg, params))
+        emb = embed_inputs(cfg, params,
+                           {"tokens": jax.numpy.asarray(
+                               np.stack(token_prompts))})
+        payloads = [np.asarray(emb[i]) for i in range(requests)]
+        executor = EngineExecutor(f, schm)
+    elif scheme == "berrut" and continuous:
         # slot-pool continuous batching: mixed per-request generation
         # budgets (1..steps) make groups retire at different rounds, the
         # churn the fixed pool exists to absorb
@@ -147,12 +180,33 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         quarantine = False
     quarantine_cfg = (QuarantineConfig(probation_ms=probation_ms)
                       if quarantine and e else None)
+    churn_model = (ChurnModel(mean_up_ms=churn_up_ms,
+                              mean_down_ms=churn_down_ms, seed=seed + 7)
+                   if churn else None)
+    controller = None
+    if adaptive:
+        # bounds: one step of headroom above the CLI operating point on
+        # each axis (E needs at least 1 so the locator can be grown in)
+        controller = RedundancyController(schm, ControllerConfig(
+            window_rounds=8, s_min=0, s_max=s + 1,
+            e_min=0, e_max=max(e, 1)))
+        pool = controller.pool
+        print(f"adaptive redundancy: start (S={s}, E={e}), bounds "
+              f"S<={s + 1} E<={max(e, 1)}, pool sized for "
+              f"{pool.num_workers} workers (DESIGN.md §12)")
+    arrival_ms = None
+    if traffic == "diurnal":
+        # diurnal + bursty non-homogeneous Poisson trace; --rate is the
+        # base (mean) rate the diurnal swing oscillates around
+        arrival_ms = trace_arrivals(requests,
+                                    TrafficModel(base_rate_rps=rate_rps),
+                                    seed=seed + 11)
     if continuous:
         sched = ContinuousScheduler(
             ContinuousConfig(coding=coding, pool_groups=pool_groups,
                              flush_deadline_ms=flush_deadline_ms,
                              slo_ms=slo_ms, seed=seed, adversary=adversary,
-                             quarantine=quarantine_cfg,
+                             quarantine=quarantine_cfg, churn=churn_model,
                              max_new_tokens=steps),
             latency_model, executor)
         print(f"continuous batching over {pool_groups} group slots "
@@ -163,20 +217,29 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
             SchedulerConfig(scheme=schm, groups_per_batch=groups_per_batch,
                             flush_deadline_ms=flush_deadline_ms,
                             slo_ms=slo_ms, seed=seed, adversary=adversary,
-                            quarantine=quarantine_cfg),
+                            quarantine=quarantine_cfg,
+                            controller=controller, churn=churn_model),
             latency_model, executor)
 
     t0 = time.time()
     # arrivals come from the scheduler's own Poisson stream, which is
     # seeded independently of the worker-latency stream
     if continuous:
-        metrics = sched.run(payloads, rate_rps=rate_rps,
-                            max_new_tokens=budgets)
+        metrics = sched.run(payloads, arrival_ms=arrival_ms,
+                            rate_rps=None if arrival_ms is not None
+                            else rate_rps, max_new_tokens=budgets)
     else:
-        metrics = sched.run(payloads, rate_rps=rate_rps)
+        metrics = sched.run(payloads, arrival_ms=arrival_ms,
+                            rate_rps=None if arrival_ms is not None
+                            else rate_rps)
     wall = time.time() - t0
 
     print(metrics.format_table())
+    if controller is not None:
+        for d in controller.decisions:
+            print(f"  retune @round {d.round_idx}: S={d.s} E={d.e} -> "
+                  f"{d.num_workers} workers, wait_for {d.wait_for} "
+                  f"({d.reason})")
     if continuous:
         print(f"{sched.rounds_run} pool rounds, wall {wall:.2f}s")
     else:
@@ -197,7 +260,7 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
             print(f"  request {r}: {sched.results[r].tolist()}")
         return [sched.results[u] for u in uids]
     outs = np.stack([sched.results[u] for u in uids])
-    if scheme == "berrut":
+    if scheme == "berrut" and not adaptive:
         toks = outs
     else:
         # scheme-generic path served last-position logits: report the
@@ -249,6 +312,21 @@ def main():
                     help="stop dispatching to repeatedly-located workers")
     ap.add_argument("--probation-ms", type=float, default=200.0,
                     help="quarantine duration before re-admission")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="closed-loop (N, E, wait_for) retuning between "
+                         "batches (DESIGN.md §12); serves single-shot "
+                         "through the scheme-generic executor")
+    ap.add_argument("--churn", action="store_true",
+                    help="workers leave/rejoin on their own exponential "
+                         "clocks (spot preemption, deploys)")
+    ap.add_argument("--churn-up-ms", type=float, default=2000.0,
+                    help="mean worker uptime between leaves")
+    ap.add_argument("--churn-down-ms", type=float, default=200.0,
+                    help="mean downtime before rejoin")
+    ap.add_argument("--traffic", default="poisson",
+                    choices=["poisson", "diurnal"],
+                    help="arrival process: homogeneous Poisson at --rate, "
+                         "or a diurnal+bursty trace around --rate")
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="Poisson arrival rate, requests/second")
     ap.add_argument("--deadline-ms", type=float, default=5.0,
@@ -267,7 +345,9 @@ def main():
         quarantine=args.quarantine, probation_ms=args.probation_ms,
         scheme=args.scheme, continuous=args.continuous,
         pool_groups=args.pool_groups, top_k=args.top_k,
-        temperature=args.temperature)
+        temperature=args.temperature, adaptive=args.adaptive,
+        churn=args.churn, churn_up_ms=args.churn_up_ms,
+        churn_down_ms=args.churn_down_ms, traffic=args.traffic)
 
 
 if __name__ == "__main__":

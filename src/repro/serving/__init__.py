@@ -6,6 +6,8 @@ from repro.serving.coded_serving import (CodedPoolState, CodedServingState,
 from repro.serving.continuous import (ContinuousConfig,
                                       ContinuousLLMExecutor,
                                       ContinuousScheduler, SlotGroup)
+from repro.serving.controller import (ControlDecision, ControllerConfig,
+                                      RedundancyController)
 from repro.serving.failures import (Adversary, AdversaryConfig, RoundAttack,
                                     corrupt_coded_preds, make_adversary,
                                     sample_byzantine_mask,
@@ -14,8 +16,9 @@ from repro.serving.failures import (Adversary, AdversaryConfig, RoundAttack,
                                     worst_case_byzantine_placement,
                                     worst_case_straggler_mask)
 from repro.serving.batcher import GroupBatcher, Request, BatchPlan
-from repro.serving.latency import (LatencyModel, percentile_table,
-                                   simulate_approxifer)
+from repro.serving.latency import (ChurnModel, LatencyModel, TrafficModel,
+                                   WorkerChurn, percentile_table,
+                                   simulate_approxifer, trace_arrivals)
 from repro.serving.metrics import (RequestRecord, ServingMetrics,
                                    summarize_latencies)
 from repro.serving.quarantine import (QuarantineConfig, QuarantineEvent,
@@ -23,20 +26,24 @@ from repro.serving.quarantine import (QuarantineConfig, QuarantineEvent,
 from repro.serving.sampling import SampleConfig, sample_tokens
 from repro.serving.scheduler import (CodedLLMExecutor, CodedScheduler,
                                      EngineExecutor, LocateReport,
-                                     SchedulerConfig, poisson_arrivals)
+                                     SchedulerConfig, apply_pool_state,
+                                     poisson_arrivals)
 
 __all__ = ["CodedServingState", "coded_prefill", "coded_decode_step",
            "CodedPoolState", "coded_pool_prefill", "coded_pool_decode_step",
            "init_pool_state", "ContinuousConfig", "ContinuousLLMExecutor",
            "ContinuousScheduler", "SlotGroup",
+           "ControlDecision", "ControllerConfig", "RedundancyController",
            "locate", "Adversary", "AdversaryConfig", "RoundAttack",
            "corrupt_coded_preds", "make_adversary",
            "sample_straggler_mask", "sample_byzantine_mask",
            "worst_case_byzantine_mask", "worst_case_byzantine_placement",
            "worst_case_straggler_mask", "GroupBatcher", "Request",
-           "BatchPlan", "LatencyModel", "percentile_table",
-           "simulate_approxifer", "RequestRecord", "ServingMetrics",
+           "BatchPlan", "ChurnModel", "LatencyModel", "TrafficModel",
+           "WorkerChurn", "percentile_table", "simulate_approxifer",
+           "trace_arrivals", "RequestRecord", "ServingMetrics",
            "summarize_latencies", "QuarantineConfig", "QuarantineEvent",
            "WorkerReputation", "CodedLLMExecutor", "CodedScheduler",
            "EngineExecutor", "LocateReport", "SchedulerConfig",
-           "poisson_arrivals", "SampleConfig", "sample_tokens"]
+           "apply_pool_state", "poisson_arrivals", "SampleConfig",
+           "sample_tokens"]

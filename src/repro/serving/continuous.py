@@ -51,12 +51,13 @@ from repro.serving.coded_serving import (coded_pool_decode_step,
                                          init_pool_state)
 from repro.serving.failures import (AdversaryConfig, RoundAttack,
                                     make_adversary)
-from repro.serving.latency import LatencyModel
+from repro.serving.latency import ChurnModel, LatencyModel, WorkerChurn
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.quarantine import QuarantineConfig, WorkerReputation
 from repro.serving.sampling import SampleConfig
-from repro.serving.scheduler import (LocateReport, derive_seed_streams,
-                                     resolve_arrivals, round_ground_truth)
+from repro.serving.scheduler import (LocateReport, apply_pool_state,
+                                     derive_seed_streams, resolve_arrivals,
+                                     round_ground_truth)
 
 # Event kinds; numeric order breaks timestamp ties (arrivals land before
 # a flush deadline at the same instant, which lands before a round).
@@ -77,6 +78,11 @@ class ContinuousConfig:
     wait_for: Optional[int] = None     # None -> scheme.decode_quorum
     adversary: Optional[AdversaryConfig] = None
     quarantine: Optional[QuarantineConfig] = None
+    # worker churn on the event clock (DESIGN.md §12); a churned-out
+    # worker's results never land, exactly like a quarantine hold.  The
+    # jitted pool shapes are fixed, so the controller does not apply
+    # here — churn and the quorum invariant do.
+    churn: Optional[ChurnModel] = None
     # "continuous": admit into free slots every round (the tentpole);
     # "run_to_completion": admit only into an EMPTY pool — the
     # batch-scoped baseline at the same pool/worker budget.
@@ -275,6 +281,8 @@ class ContinuousScheduler:
                 "colluding adversary (it is jit-static)")
         self.reputation = (WorkerReputation(scheme, config.quarantine)
                            if config.quarantine is not None else None)
+        self._churn = (WorkerChurn(config.churn, scheme.num_workers)
+                       if config.churn is not None else None)
         self._rng, self._arrival_seed = derive_seed_streams(config.seed)
         self._events: list = []
         self._seq = itertools.count()
@@ -356,6 +364,11 @@ class ContinuousScheduler:
             counts = self.reputation.counts()
             self.metrics.quarantine_events = counts["quarantines"]
             self.metrics.readmissions = counts["readmissions"]
+            self.metrics.early_readmissions = counts["early_readmissions"]
+        if self._churn is not None:
+            leaves, joins = self._churn.events_until(self._now)
+            self.metrics.churn_leaves = leaves
+            self.metrics.churn_joins = joins
         return self.metrics
 
     # -- handlers --------------------------------------------------------
@@ -420,14 +433,15 @@ class ContinuousScheduler:
             return
         times = self.latency_model.sample(self._rng,
                                           self.scheme.num_workers)
-        if self.reputation is not None:
-            alive = self.reputation.active_mask(now)
-            times = np.where(alive > 0, times, np.inf)
-            # quarantine caps concurrent holds at E, so >= 1 worker is
-            # always alive; the clamp guards the invariant regardless
-            wait = max(1, min(self._wait_for, int(alive.sum())))
-        else:
-            wait = self._wait_for
+        # quarantined / churned-out workers are pre-masked out of the
+        # wait-for selection; the quorum invariant (apply_pool_state,
+        # DESIGN.md §12) early-readmits held workers rather than let the
+        # round silently wait below the K+2E locator quorum
+        wait, times, degraded, _ = apply_pool_state(
+            self.scheme, self._wait_for, times, now,
+            reputation=self.reputation, churn=self._churn)
+        if degraded:
+            self.metrics.degraded_rounds += 1
         mask, trigger = mask_from_completion_times(self.scheme, times,
                                                    wait_for=wait)
         attack = (self.adversary.next_round()

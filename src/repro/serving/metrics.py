@@ -39,6 +39,8 @@ class RequestRecord:
     # -- autoregressive serving (continuous batching, DESIGN.md §10) --
     first_token_ms: Optional[float] = None   # when the first token shipped
     tokens: int = 0               # generated tokens (0: single-shot serve)
+    # multi-tenant deadline class (DESIGN.md §12)
+    slo_class: str = "default"
 
     @property
     def latency_ms(self) -> float:
@@ -89,6 +91,15 @@ class ServingMetrics:
         self.corrupted_decodes = 0    # rounds where corruption survived
         self.quarantine_events = 0    # workers placed in quarantine
         self.readmissions = 0         # workers re-admitted after probation
+        self.early_readmissions = 0   # quorum-preserving early releases
+        # -- quorum invariant + production-traffic realism (DESIGN.md §12):
+        # a round is "degraded" when the dispatchable pool could not meet
+        # scheme.decode_quorum even after early readmission (worker churn
+        # can shrink the pool below any quota quarantine controls) --
+        self.degraded_rounds = 0
+        self.churn_leaves = 0         # workers that left the pool (churn)
+        self.churn_joins = 0          # workers that (re)joined the pool
+        self.control_decisions = 0    # adaptive (N, E, wait_for) retunes
 
     def record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
@@ -125,6 +136,14 @@ class ServingMetrics:
 
     def percentiles(self) -> Dict[str, float]:
         return summarize_latencies(self.latencies_ms())
+
+    def percentiles_by_class(self) -> Dict[str, Dict[str, float]]:
+        """Per-SLO-class latency percentiles (multi-tenant serving)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for cls in sorted({r.slo_class for r in self.records}):
+            out[cls] = summarize_latencies(
+                [r.latency_ms for r in self.records if r.slo_class == cls])
+        return out
 
     def makespan_ms(self) -> float:
         if not self.records:
@@ -219,6 +238,14 @@ class ServingMetrics:
                 quarantine_events=float(self.quarantine_events),
                 readmissions=float(self.readmissions),
             )
+        if self.degraded_rounds or self.early_readmissions:
+            out.update(degraded_rounds=float(self.degraded_rounds),
+                       early_readmissions=float(self.early_readmissions))
+        if self.churn_leaves or self.churn_joins:
+            out.update(churn_leaves=float(self.churn_leaves),
+                       churn_joins=float(self.churn_joins))
+        if self.control_decisions:
+            out.update(control_decisions=float(self.control_decisions))
         return out
 
     def format_table(self) -> str:
@@ -254,5 +281,16 @@ class ServingMetrics:
             if self.quarantine_events:
                 lines.append(
                     f"quarantines {self.quarantine_events}  "
-                    f"readmissions {self.readmissions}")
+                    f"readmissions {self.readmissions}"
+                    + (f" (early {self.early_readmissions})"
+                       if self.early_readmissions else ""))
+        if self.degraded_rounds:
+            lines.append(f"degraded rounds {self.degraded_rounds} "
+                         "(pool below decode quorum)")
+        if self.churn_leaves or self.churn_joins:
+            lines.append(f"churn    {self.churn_leaves} leaves  "
+                         f"{self.churn_joins} joins")
+        if self.control_decisions:
+            lines.append(f"adaptive redundancy decisions "
+                         f"{self.control_decisions}")
         return "\n".join(lines)

@@ -52,10 +52,11 @@ import numpy as np
 from repro.core.berrut import CodingConfig
 from repro.core.engine import group_queries, mask_from_completion_times
 from repro.core.scheme import RedundancyScheme, as_scheme
-from repro.serving.batcher import BatchPlan, GroupBatcher
+from repro.serving.batcher import DEFAULT_CLASS, BatchPlan, GroupBatcher
+from repro.serving.controller import RedundancyController
 from repro.serving.failures import (AdversaryConfig, RoundAttack,
                                     corrupt_coded_preds, make_adversary)
-from repro.serving.latency import LatencyModel
+from repro.serving.latency import ChurnModel, LatencyModel, WorkerChurn
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.quarantine import QuarantineConfig, WorkerReputation
 from repro.serving.sampling import SampleConfig
@@ -114,6 +115,72 @@ def round_ground_truth(mask: np.ndarray, attack) -> Tuple[np.ndarray,
     return dispatched, corrupt & dispatched
 
 
+def apply_pool_state(scheme, wait_target: int, times: np.ndarray,
+                     now: float, reputation=None, churn=None
+                     ) -> Tuple[int, np.ndarray, bool, int]:
+    """Fold churn + quarantine into one round's completion times and
+    derive the effective wait-for under the quorum invariant (§12).
+
+    Returns ``(wait, times, degraded, locate_quorum)``.
+
+    The quarantine→quorum hole this closes: quarantine holds (or churn)
+    can shrink the dispatchable pool below ``scheme.decode_quorum``, and
+    the old clamp ``min(wait_for, active)`` then silently dropped the
+    decode below the K+2E locator quorum — the locator stopped running
+    exactly when workers were being held for misbehaving.  Now:
+
+      1. if the pool cannot meet the quorum, the longest-held
+         quarantined workers are readmitted early
+         (``WorkerReputation.release_for_quorum``) before sampling;
+      2. if the quorum IS reachable, the round waits for it (never
+         silently below — "wait for all active workers");
+      3. if even readmission cannot restore it (churn), the round is
+         **degraded**: it waits for every active worker and the decode
+         forces the locator at the reduced quorum ``K + 2*E_active``
+         (``E_active = E - held``: each hold spends locator budget on a
+         worker that cannot corrupt this round anyway).
+
+    A ``wait_target`` the caller set explicitly BELOW the quorum (the
+    latency-over-robustness operating point, e.g. speculative serving
+    experiments) is honored unchanged — the invariant protects against
+    the pool shrinking under a quorum-respecting target, not against a
+    deliberate override.
+    """
+    width = len(times)
+    quorum = min(scheme.decode_quorum, width)
+    if reputation is None and churn is None:
+        return wait_target, times, False, quorum
+    avail = np.ones((width,), np.float32)
+    if churn is not None:
+        avail *= churn.alive_mask(now)[:width]
+    held = 0
+    if reputation is not None:
+        active = reputation.active_mask(now)[:width]
+        if float((avail * active).sum()) < quorum:
+            alive_full = np.zeros((len(reputation.quarantined),),
+                                  np.float32)
+            alive_full[:width] = avail
+            reputation.release_for_quorum(now, quorum, alive=alive_full)
+            active = (~reputation.quarantined).astype(np.float32)[:width]
+        avail *= active
+        held = int(reputation.quarantined.sum())
+    active_n = int(avail.sum())
+    if active_n == 0:
+        # total churn blackout: the round effectively stalls until
+        # workers return — dispatch to the sampled pool and flag it
+        return wait_target, times, True, quorum
+    times = np.where(avail > 0, times, np.inf)
+    wait = max(1, min(wait_target, active_n))
+    if scheme.has_locator and wait_target >= quorum and wait < quorum:
+        wait = min(quorum, active_n)        # all active workers
+    degraded = active_n < min(wait_target, quorum)
+    locate_quorum = quorum
+    if degraded:
+        e_active = max(scheme.e - held, 0)
+        locate_quorum = min(quorum, scheme.k + 2 * e_active)
+    return wait, times, degraded, locate_quorum
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Knobs of the serving runtime.
@@ -137,6 +204,18 @@ class SchedulerConfig:
     wait_for: Optional[int] = None
     adversary: Optional[AdversaryConfig] = None
     quarantine: Optional[QuarantineConfig] = None
+    # -- production-traffic realism + closed-loop redundancy (§12) --
+    # Adaptive (N, E, wait_for) retuning between batches; requires an
+    # executor that can re-plan per batch (EngineExecutor).  Per-worker
+    # state (reputation, adversary, churn) is sized to the controller's
+    # MAXIMUM operating point; narrower batches dispatch to a prefix.
+    controller: Optional[RedundancyController] = None
+    # Worker churn (leave/rejoin on the event clock); a churned-out
+    # worker's results never land, exactly like a quarantine hold.
+    churn: Optional[ChurnModel] = None
+    # Per-SLO-class flush deadlines (multi-tenant batching; classes
+    # never mix in a batch).  Falls back to ``flush_deadline_ms``.
+    class_deadlines: Optional[Dict[str, Optional[float]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,9 +241,12 @@ class InflightBatch:
     plan: BatchPlan
     queries: Any                       # stacked payloads handed to executor
     dispatch_plan: Any = None          # scheme.plan(...) for this batch
+    scheme: Any = None                 # operating point at dispatch time
+    wait_target: int = 0               # intended wait-for at dispatch time
     handle: Any = None                 # executor state
     dispatch_ms: float = 0.0
     round_masks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    round_quorums: List[int] = dataclasses.field(default_factory=list)
     round_waits: List[float] = dataclasses.field(default_factory=list)
     round_attacks: List[Optional[RoundAttack]] = dataclasses.field(
         default_factory=list)
@@ -206,6 +288,9 @@ class EngineExecutor:
 
     rounds = 1
     supports_speculation = True
+    # the scheduler may pass a per-batch ``scheme`` (adaptive redundancy)
+    # and a per-round ``locate_quorum`` (degraded rounds) to this executor
+    supports_replan = True
 
     def __init__(self, predict_fn, scheme):
         self.predict_fn = predict_fn
@@ -213,8 +298,8 @@ class EngineExecutor:
         # legacy alias: the Berrut CodingConfig, when this is one
         self.coding = getattr(self.scheme, "coding", None)
 
-    def dispatch(self, queries) -> jnp.ndarray:
-        scheme = self.scheme
+    def dispatch(self, queries, scheme=None) -> jnp.ndarray:
+        scheme = self.scheme if scheme is None else as_scheme(scheme)
         q = jnp.asarray(queries)
         coded = scheme.encode(group_queries(q, scheme.k))
         return scheme.forward(self.predict_fn, coded)
@@ -224,16 +309,22 @@ class EngineExecutor:
         raise RuntimeError("single-round executor has no step()")
 
     def decode(self, handle, mask: np.ndarray,
-               attack: Optional[RoundAttack] = None
+               attack: Optional[RoundAttack] = None, scheme=None,
+               locate_quorum: Optional[int] = None
                ) -> Tuple[np.ndarray, Optional[LocateReport]]:
-        scheme = self.scheme
+        scheme = self.scheme if scheme is None else as_scheme(scheme)
         preds = corrupt_coded_preds(handle, attack)
         avail = jnp.asarray(mask, preds.dtype)
-        # Locator-aware decode: below the scheme's decode quorum
-        # (speculative early decodes) error location is hopeless —
-        # decode plainly and let the full decode correct; at or above
-        # it, run the scheme's locate -> exclude -> decode pipeline.
-        if scheme.has_locator and int(np.sum(mask)) >= scheme.decode_quorum:
+        # Locator-aware decode: below the locate quorum (speculative
+        # early decodes) error location is hopeless — decode plainly and
+        # let the full decode correct; at or above it, run the scheme's
+        # locate -> exclude -> decode pipeline.  ``locate_quorum``
+        # overrides the default K+2E threshold on degraded rounds, where
+        # quarantine holds have already spent part of the locator budget
+        # (K + 2*E_active suffices for the E_active free adversaries).
+        quorum = (scheme.decode_quorum if locate_quorum is None
+                  else locate_quorum)
+        if scheme.has_locator and int(np.sum(mask)) >= quorum:
             decoded, located, votes, masks = scheme.locate(preds, avail)
             report = LocateReport(located=np.asarray(located),
                                   votes=np.asarray(votes),
@@ -399,9 +490,30 @@ class CodedScheduler:
                 f"({declared.config}) but the executor runs "
                 f"{scheme.name!r} ({scheme.config})")
         self.scheme = scheme
+        self.controller = config.controller
+        if self.controller is not None:
+            if not getattr(executor, "supports_replan", False):
+                raise ValueError(
+                    "adaptive redundancy needs an executor that re-plans "
+                    "per batch (EngineExecutor); "
+                    f"{type(executor).__name__} cannot")
+            base = self.controller.base
+            if base.name != scheme.name or base.k != scheme.k:
+                raise ValueError(
+                    f"controller tunes scheme {base.name!r} K={base.k} "
+                    f"but the executor runs {scheme.name!r} K={scheme.k}")
+            if config.wait_for is not None:
+                raise ValueError("wait_for is controller-managed under "
+                                 "adaptive redundancy")
+        # per-worker state (reputation / adversary / churn / latency
+        # draws) is sized to the widest pool the run can dispatch to
+        pool = self.controller.pool if self.controller is not None \
+            else scheme
+        self._pool_workers = pool.num_workers
         self.batcher = GroupBatcher(
             scheme, groups_per_batch=config.groups_per_batch,
-            flush_deadline_ms=config.flush_deadline_ms)
+            flush_deadline_ms=config.flush_deadline_ms,
+            class_deadlines=config.class_deadlines)
         self.metrics = ServingMetrics(slo_ms=config.slo_ms)
         self.batches: List[InflightBatch] = []
         self.results: Dict[int, np.ndarray] = {}
@@ -416,9 +528,11 @@ class CodedScheduler:
         if not 1 <= self._wait_for <= scheme.num_workers:
             raise ValueError(f"wait_for={self._wait_for} out of range for "
                              f"{scheme.num_workers} workers")
-        self.adversary = make_adversary(scheme, config.adversary)
-        self.reputation = (WorkerReputation(scheme, config.quarantine)
+        self.adversary = make_adversary(pool, config.adversary)
+        self.reputation = (WorkerReputation(pool, config.quarantine)
                            if config.quarantine is not None else None)
+        self._churn = (WorkerChurn(config.churn, self._pool_workers)
+                       if config.churn is not None else None)
         self._rng, self._arrival_seed = derive_seed_streams(config.seed)
         self._events: list = []
         self._seq = itertools.count()
@@ -433,11 +547,15 @@ class CodedScheduler:
 
     def run(self, payloads: Sequence[Any],
             arrival_ms: Optional[Sequence[float]] = None,
-            rate_rps: Optional[float] = None) -> ServingMetrics:
+            rate_rps: Optional[float] = None,
+            slo_classes: Optional[Sequence[str]] = None) -> ServingMetrics:
         arrival_ms = resolve_arrivals(len(payloads), arrival_ms, rate_rps,
                                       self._arrival_seed)
-        for t, payload in zip(arrival_ms, payloads):
-            self._push(float(t), _ARRIVAL, payload)
+        if slo_classes is not None and len(slo_classes) != len(payloads):
+            raise ValueError("slo_classes/payloads length mismatch")
+        for i, (t, payload) in enumerate(zip(arrival_ms, payloads)):
+            cls = DEFAULT_CLASS if slo_classes is None else slo_classes[i]
+            self._push(float(t), _ARRIVAL, (payload, cls))
         while self._events or len(self.batcher):
             if not self._events:
                 # arrivals exhausted with no flush deadline configured:
@@ -459,18 +577,24 @@ class CodedScheduler:
             counts = self.reputation.counts()
             self.metrics.quarantine_events = counts["quarantines"]
             self.metrics.readmissions = counts["readmissions"]
+            self.metrics.early_readmissions = counts["early_readmissions"]
+        if self._churn is not None:
+            leaves, joins = self._churn.events_until(self._now)
+            self.metrics.churn_leaves = leaves
+            self.metrics.churn_joins = joins
         return self.metrics
 
     # -- handlers --------------------------------------------------------
 
-    def _on_arrival(self, t: float, payload: Any) -> None:
-        uid = self.batcher.submit(payload, now=t)
+    def _on_arrival(self, t: float, data) -> None:
+        payload, cls = data
+        uid = self.batcher.submit(payload, now=t, slo_class=cls)
         self._arrival_ms[uid] = t
         while self.batcher.ready():
             self._dispatch(t, flushed=False)
-        if self.batcher.flush_deadline_ms is not None and uid in \
-                self.batcher.pending_uids():
-            self._push(t + self.batcher.flush_deadline_ms, _FLUSH, uid)
+        deadline = self.batcher.class_deadline_ms(cls)
+        if deadline is not None and uid in self.batcher.pending_uids():
+            self._push(t + deadline, _FLUSH, uid)
 
     def _on_flush(self, t: float, uid: int) -> None:
         # the event was scheduled for ``uid``'s deadline; if uid already
@@ -484,12 +608,24 @@ class CodedScheduler:
         plan = self.batcher.next_batch(flush=flushed or force, pad=pad)
         if plan is None:
             return
+        # the batch's operating point is pinned at dispatch: the
+        # controller may retune BETWEEN batches, never under one
+        if self.controller is not None:
+            scheme = self.controller.scheme
+            wait_target = self.controller.wait_for
+        else:
+            scheme, wait_target = self.scheme, self._wait_for
         batch = InflightBatch(bid=next(self._bid), plan=plan,
                               queries=self.batcher.stack_payloads(plan),
-                              dispatch_plan=self.scheme.plan(
-                                  len(plan.requests) // self.scheme.k),
+                              dispatch_plan=scheme.plan(
+                                  len(plan.requests) // scheme.k),
+                              scheme=scheme, wait_target=wait_target,
                               dispatch_ms=now, deadline_flushed=flushed)
-        batch.handle = self.executor.dispatch(batch.queries)
+        if self.controller is not None:
+            batch.handle = self.executor.dispatch(batch.queries,
+                                                  scheme=scheme)
+        else:
+            batch.handle = self.executor.dispatch(batch.queries)
         self.batches.append(batch)
         self.metrics.batches += 1
         if flushed:
@@ -503,23 +639,31 @@ class CodedScheduler:
         """Sample this round's worker completion times, the adversary's
         move, and schedule the adaptive wait-for decode trigger."""
         plan = batch.dispatch_plan
-        times = self.latency_model.sample(self._rng, plan.num_workers)
-        if self.reputation is not None:
-            # quarantined workers are simply not dispatched to: their
-            # results never land, so the wait-for selection skips them
-            active = self.reputation.active_mask(now)
-            times = np.where(active > 0, times, np.inf)
-            # quarantine caps concurrent holds at E, so >= 1 worker is
-            # always alive; the clamp guards the invariant regardless
-            wait = max(1, min(self._wait_for, int(active.sum())))
-        else:
-            wait = self._wait_for
+        # latency draws always cover the widest pool (controller runs
+        # slice a prefix), so the RNG stream — and therefore the golden
+        # trace — does not depend on the controller's decisions
+        times = self.latency_model.sample(self._rng, self._pool_workers)
+        if plan.num_workers != self._pool_workers:
+            times = times[:plan.num_workers]
+        # quarantined / churned-out workers are simply not dispatched
+        # to: their results never land, so the wait-for selection skips
+        # them — and the quorum invariant (apply_pool_state) decides
+        # what happens when too few workers remain
+        wait, times, degraded, locate_quorum = apply_pool_state(
+            batch.scheme, batch.wait_target, times, now,
+            reputation=self.reputation, churn=self._churn)
+        if degraded:
+            self.metrics.degraded_rounds += 1
         mask, trigger = mask_from_completion_times(plan, times,
                                                    wait_for=wait)
         attack = (self.adversary.next_round()
                   if self.adversary is not None else None)
+        if attack is not None and len(attack.mask) != plan.num_workers:
+            attack = dataclasses.replace(
+                attack, mask=attack.mask[:plan.num_workers])
         batch.worker_times.append(times)
         batch.round_masks.append(mask)
+        batch.round_quorums.append(locate_quorum)
         batch.round_waits.append(float(trigger))
         batch.round_attacks.append(attack)
         self._push(now + float(trigger), _ROUND, (batch, round_idx))
@@ -552,8 +696,12 @@ class CodedScheduler:
         self.trace.append(("spec", batch.bid, t,
                            tuple(np.flatnonzero(landed).tolist())))
         attack = batch.round_attacks[-1]
-        batch.spec_outputs, _ = self.executor.decode(batch.handle, landed,
-                                                     attack=attack)
+        if getattr(self.executor, "supports_replan", False):
+            batch.spec_outputs, _ = self.executor.decode(
+                batch.handle, landed, attack=attack, scheme=batch.scheme)
+        else:
+            batch.spec_outputs, _ = self.executor.decode(
+                batch.handle, landed, attack=attack)
         self.metrics.speculative_decodes += 1
         for slot, req in enumerate(batch.plan.requests):
             if batch.plan.valid[slot]:
@@ -572,12 +720,19 @@ class CodedScheduler:
                                                       attack=attack)
             batch.round_reports.append(report)
             self._observe(t, mask, attack, report)
+            self._control(t, batch, round_idx, report)
             self._start_round(batch, t, round_idx + 1)
             return
-        batch.outputs, report = self.executor.decode(batch.handle, mask,
-                                                     attack=attack)
+        if getattr(self.executor, "supports_replan", False):
+            batch.outputs, report = self.executor.decode(
+                batch.handle, mask, attack=attack, scheme=batch.scheme,
+                locate_quorum=batch.round_quorums[round_idx])
+        else:
+            batch.outputs, report = self.executor.decode(
+                batch.handle, mask, attack=attack)
         batch.round_reports.append(report)
         self._observe(t, mask, attack, report)
+        self._control(t, batch, round_idx, report)
         batch.complete_ms = t
         self.trace.append(("complete", batch.bid, t))
         corrected = self._corrections(batch)
@@ -594,7 +749,8 @@ class CodedScheduler:
                 # full decode is the trailing correction
                 complete_ms=batch.spec_ms if spec else t,
                 speculative=spec,
-                corrected=bool(corrected[slot]) if spec else False))
+                corrected=bool(corrected[slot]) if spec else False,
+                slo_class=req.slo_class))
 
     def _observe(self, t: float, mask: np.ndarray,
                  attack: Optional[RoundAttack],
@@ -610,7 +766,36 @@ class CodedScheduler:
             np.any((report.masks >= 0.5) & true_corrupt[None, :]))
         self.metrics.observe_locate(detected, true_corrupt, decode_corrupt)
         if self.reputation is not None:
-            self.reputation.observe(t, detected, dispatched)
+            # reputation is sized to the widest pool; a narrower batch's
+            # verdicts cover a prefix (workers past it: not dispatched)
+            self.reputation.observe(t, self._pad_pool(detected),
+                                    self._pad_pool(dispatched))
+
+    def _pad_pool(self, arr: np.ndarray) -> np.ndarray:
+        arr = np.asarray(arr, bool)
+        if arr.shape[0] == self._pool_workers:
+            return arr
+        out = np.zeros((self._pool_workers,), bool)
+        out[:arr.shape[0]] = arr
+        return out
+
+    def _control(self, t: float, batch: InflightBatch, round_idx: int,
+                 report: Optional[LocateReport]) -> None:
+        """Feed one round's telemetry to the adaptive controller."""
+        if self.controller is None:
+            return
+        before = len(self.controller.decisions)
+        held = (int(self.reputation.quarantined.sum())
+                if self.reputation is not None else 0)
+        decision = self.controller.observe_round(
+            t, times=batch.worker_times[round_idx],
+            trigger_ms=batch.round_waits[round_idx], report=report,
+            quarantined=held)
+        self.metrics.control_decisions += \
+            len(self.controller.decisions) - before
+        if decision is not None:
+            self.trace.append(("retune", t, decision.num_workers,
+                               decision.e, decision.wait_for))
 
     def _corrections(self, batch: InflightBatch) -> np.ndarray:
         """Per-slot flag: did the full decode revise the speculative

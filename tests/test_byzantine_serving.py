@@ -145,7 +145,8 @@ class TestQuarantineLifecycle:
         events = rep.observe(1.0, det, disp)              # 2nd strike
         assert [e.action for e in events] == ["quarantine"]
         assert rep.active_mask(2.0)[3] == 0.0             # held out
-        assert rep.counts() == {"quarantines": 1, "readmissions": 0}
+        assert rep.counts() == {"quarantines": 1, "readmissions": 0,
+                                "early_readmissions": 0}
         # probation expires on the event clock -> readmitted
         assert rep.active_mask(60.0)[3] == 1.0
         assert rep.counts()["readmissions"] == 1

@@ -1,0 +1,283 @@
+"""Regression tests for the quarantine→quorum decode hole (DESIGN.md §12).
+
+The hole: with E > 0 the scheduler's adaptive wait-for is the K+2E
+locator quorum, but quarantine holds (or worker churn) shrink the
+dispatchable pool, and the old clamp ``min(wait_for, active)`` silently
+dropped the round's wait below the quorum — ``EngineExecutor.decode``
+then took the locator-FREE branch, so a persistent adversary corrupted
+every answer precisely while the system was "protecting" itself by
+holding workers.  ``test_quarantine_cannot_starve_locator_quorum``
+reproduces that exact trajectory and fails on the pre-fix scheduler.
+
+The fix (``apply_pool_state``): early-readmit the longest-held workers
+to restore the quorum; when even that cannot (churn), wait for ALL
+active workers, force the locator at the reduced quorum K + 2*E_active,
+and record the round as degraded.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                       # pragma: no cover
+    import sys
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).parent))
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.berrut import CodingConfig
+from repro.core.scheme import get_scheme
+from repro.serving.failures import AdversaryConfig
+from repro.serving.latency import ChurnModel, LatencyModel
+from repro.serving.quarantine import QuarantineConfig, WorkerReputation
+from repro.serving.scheduler import (CodedScheduler, EngineExecutor,
+                                     SchedulerConfig, apply_pool_state)
+
+RNG = np.random.RandomState(0)
+W_OUT = RNG.randn(3, 2)
+
+
+def _predict(x):
+    return np.asarray(x) @ W_OUT
+
+
+def _serve(scheme, quarantine, n=48, adversary=None, seed=0, churn=None,
+           pre_quarantine=0):
+    """Run a small serve; returns (scheduler, metrics)."""
+    cfg = SchedulerConfig(
+        scheme=scheme, groups_per_batch=1, flush_deadline_ms=1.0,
+        seed=seed, adversary=adversary, quarantine=quarantine, churn=churn)
+    sched = CodedScheduler(cfg, LatencyModel(tail_prob=0.1),
+                           EngineExecutor(_predict, scheme))
+    if pre_quarantine:
+        # strike enough honest workers into quarantine that the active
+        # pool drops below the locator quorum — the hole's trigger
+        bad = set(sched.adversary.workers.tolist()) if sched.adversary \
+            else set()
+        honest = [w for w in range(scheme.num_workers) if w not in bad]
+        victims = honest[:pre_quarantine]
+        det = np.zeros((scheme.num_workers,), bool)
+        det[victims] = True
+        disp = np.ones((scheme.num_workers,), bool)
+        for t in (-2.0, -1.0):                 # two strikes -> quarantine
+            sched.reputation.observe(t, det, disp)
+        assert int(sched.reputation.quarantined.sum()) == pre_quarantine
+    payloads = [np.random.RandomState(i).randn(3) for i in range(n)]
+    metrics = sched.run(payloads, rate_rps=2000.0)
+    return sched, metrics
+
+
+class TestQuorumHole:
+    def test_quarantine_cannot_starve_locator_quorum(self):
+        """THE regression: 6 held workers leave 7 < K+2E = 8 active; the
+        pre-fix scheduler waited for 7 and decoded locator-free against
+        a persistent 2-adversary attack.  Post-fix, every locator-scheme
+        decode mask meets the quorum (early readmission restores it)."""
+        scheme = get_scheme("berrut", 4, s=1, e=2)      # N+1 = 13, quorum 8
+        quorum = scheme.decode_quorum
+        assert quorum == 8
+        sched, metrics = _serve(
+            scheme,
+            QuarantineConfig(strikes=2, window=4, probation_ms=1e9,
+                             max_quarantined=6),
+            adversary=AdversaryConfig(kind="persistent", num_adversaries=2,
+                                      sigma=100.0, seed=3),
+            pre_quarantine=6)
+        for batch in sched.batches:
+            for mask in batch.round_masks:
+                assert int(mask.sum()) >= quorum, \
+                    "decode ran below the locator quorum"
+        # the locator actually ran (pre-fix: locate_rounds == 0 — decode
+        # silently took the locator-free branch every round)
+        assert metrics.locate_rounds == len(sched.batches)
+        # restoring the quorum required early readmissions
+        assert metrics.early_readmissions >= 1
+        # and with the locator back, the persistent attack is contained
+        assert metrics.detection_recall() > 0.5
+        assert metrics.corrupted_decode_rate() < 0.5
+
+    def test_degraded_round_forces_locator_at_reduced_quorum(self):
+        """When churn (not quarantine) starves the pool below quorum,
+        the round waits for all active workers, runs the locator at
+        K + 2*E_active, and is recorded as degraded."""
+        scheme = get_scheme("berrut", 4, s=1, e=1)      # N+1 = 11, quorum 6
+        times = np.full((scheme.num_workers,), 5.0)
+
+        class FakeChurn:
+            def alive_mask(self, now_ms):
+                m = np.ones((scheme.num_workers,), np.float32)
+                m[: scheme.num_workers - 5] = 0.0       # only 5 alive < 6
+                return m
+
+        wait, t2, degraded, locate_quorum = apply_pool_state(
+            scheme, scheme.decode_quorum, times, 0.0, reputation=None,
+            churn=FakeChurn())
+        assert degraded
+        assert wait == 5                               # all active workers
+        assert locate_quorum == scheme.k + 2 * scheme.e   # no holds spent
+        assert np.isinf(t2[: scheme.num_workers - 5]).all()
+
+    def test_degraded_quorum_discounts_held_workers(self):
+        """Quarantine holds spend locator budget: a degraded round with
+        ``held`` workers in quarantine forces the locator at
+        K + 2*(E - held)."""
+        scheme = get_scheme("berrut", 4, s=1, e=2)      # N+1 = 13, quorum 8
+        rep = WorkerReputation(scheme,
+                               QuarantineConfig(probation_ms=1e9,
+                                                max_quarantined=2))
+        det = np.zeros((scheme.num_workers,), bool)
+        det[[8, 9]] = True            # held workers are ALSO churned out
+        disp = np.ones((scheme.num_workers,), bool)
+        for t in (-2.0, -1.0):
+            rep.observe(t, det, disp)
+        assert int(rep.quarantined.sum()) == 2
+
+        class FakeChurn:
+            def alive_mask(self, now_ms):
+                m = np.ones((scheme.num_workers,), np.float32)
+                m[6:] = 0.0                           # 6 alive < quorum 8
+                return m
+
+        times = np.full((scheme.num_workers,), 5.0)
+        wait, _, degraded, locate_quorum = apply_pool_state(
+            scheme, scheme.decode_quorum, times, 0.0, reputation=rep,
+            churn=FakeChurn())
+        assert degraded
+        # both held workers are churned-out too, so releasing them can't
+        # help; E_active = 2 - 2 = 0 -> plain-decode quorum K
+        assert locate_quorum == scheme.k
+        assert wait <= 6
+
+    def test_explicit_below_quorum_wait_is_honored(self):
+        """A caller-set wait_for BELOW the quorum is a deliberate
+        operating point, not the hole — the clamp must not raise it."""
+        scheme = get_scheme("berrut", 4, s=1, e=1)
+        times = np.arange(scheme.num_workers, dtype=np.float64) + 1.0
+        rep = WorkerReputation(scheme, QuarantineConfig())
+        wait, _, degraded, _ = apply_pool_state(
+            scheme, 3, times, 0.0, reputation=rep, churn=None)
+        assert wait == 3
+        assert not degraded
+
+    def test_scheduler_counts_degraded_rounds_under_churn(self):
+        """End to end: heavy churn over a quarantine-free pool produces
+        degraded rounds in ServingMetrics (and the run completes)."""
+        scheme = get_scheme("berrut", 4, s=1, e=1)
+        sched, metrics = _serve(
+            scheme, QuarantineConfig(), n=64, seed=1,
+            churn=ChurnModel(mean_up_ms=30.0, mean_down_ms=120.0, seed=5))
+        assert metrics.churn_leaves > 0
+        assert metrics.degraded_rounds > 0
+        assert len(metrics.records) == 64
+
+
+class TestQuorumProperty:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), e=st.integers(1, 2),
+           cap=st.integers(1, 6), held=st.integers(0, 6))
+    def test_locator_decode_masks_meet_quorum(self, seed, e, cap, held):
+        """Property: WITHOUT churn, every round mask a locator scheme
+        decodes satisfies ``mask.sum() >= decode_quorum`` — no matter
+        how many workers the quarantine holds (the invariant the hole
+        violated)."""
+        scheme = get_scheme("berrut", 3, s=1, e=e)
+        cap = min(cap, scheme.num_workers - 1)
+        held = min(held, cap)
+        sched, metrics = _serve(
+            scheme,
+            QuarantineConfig(strikes=2, window=4, probation_ms=50.0,
+                             max_quarantined=cap),
+            n=24,
+            adversary=AdversaryConfig(kind="intermittent", attack_rate=0.6,
+                                      num_adversaries=e, sigma=80.0,
+                                      seed=seed),
+            seed=seed, pre_quarantine=held)
+        assert metrics.degraded_rounds == 0      # no churn -> never degraded
+        quorum = scheme.decode_quorum
+        for batch in sched.batches:
+            for mask in batch.round_masks:
+                assert int(mask.sum()) >= quorum
+
+
+class TestPendingOffenders:
+    def test_offender_at_full_cap_is_pending_then_promoted(self):
+        """An offender crossing the strike threshold while the cap is
+        full is no longer silently dropped: it waits on the pending list
+        and is quarantined the moment a slot frees."""
+        coding = CodingConfig(k=4, s=1, e=1)             # cap defaults to 1
+        rep = WorkerReputation(coding, QuarantineConfig(
+            strikes=2, window=4, probation_ms=100.0))
+        n = coding.num_workers
+        disp = np.ones((n,), bool)
+        det_a = np.zeros((n,), bool)
+        det_a[3] = True
+        for t in (0.0, 1.0):
+            rep.observe(t, det_a, disp)                  # worker 3 held
+        assert rep.quarantined[3]
+        det_b = np.zeros((n,), bool)
+        det_b[5] = True
+        for t in (2.0, 3.0):
+            rep.observe(t, det_b, disp)                  # cap full -> pending
+        assert not rep.quarantined[5]
+        assert rep.pending_offenders == [5]
+        # probation expires -> worker 3 readmitted -> 5 promoted, with no
+        # new detection required (the pre-fix behavior needed one)
+        rep.active_mask(102.0)
+        assert rep.quarantined[5]
+        assert rep.pending_offenders == []
+        acts = [e.action for e in rep.events]
+        assert acts == ["quarantine", "readmit", "quarantine"]
+
+    def test_pending_offender_can_redeem_itself(self):
+        """Clean dispatches age strikes out of the window, so a pending
+        offender whose record clears is dropped, not quarantined."""
+        coding = CodingConfig(k=4, s=1, e=1)
+        rep = WorkerReputation(coding, QuarantineConfig(
+            strikes=2, window=3, probation_ms=100.0))
+        n = coding.num_workers
+        disp = np.ones((n,), bool)
+        det_a = np.zeros((n,), bool)
+        det_a[3] = True
+        det_b = np.zeros((n,), bool)
+        det_b[5] = True
+        clean = np.zeros((n,), bool)
+        for t in (0.0, 1.0):
+            rep.observe(t, det_a, disp)
+        for t in (2.0, 3.0):
+            rep.observe(t, det_b, disp)
+        assert rep.pending_offenders == [5]
+        for t in (4.0, 5.0, 6.0):                        # window-length clean
+            rep.observe(t, clean, disp)
+        rep.active_mask(102.0)                           # slot frees
+        assert not rep.quarantined[5]
+        assert rep.pending_offenders == []
+
+    def test_early_release_makes_room_for_pending(self):
+        """``release_for_quorum`` frees a slot; the next observation
+        promotes the waiting offender into it."""
+        coding = CodingConfig(k=4, s=1, e=1)
+        rep = WorkerReputation(coding, QuarantineConfig(
+            strikes=2, window=8, probation_ms=1e9))
+        n = coding.num_workers
+        disp = np.ones((n,), bool)
+        det_a = np.zeros((n,), bool)
+        det_a[3] = True
+        det_b = np.zeros((n,), bool)
+        det_b[5] = True
+        for t in (0.0, 1.0):
+            rep.observe(t, det_a, disp)
+        for t in (2.0, 3.0):
+            rep.observe(t, det_b, disp)
+        assert rep.pending_offenders == [5]
+        events = rep.release_for_quorum(4.0, need=n)     # force 3 out
+        assert [e.action for e in events] == ["readmit_early"]
+        assert not rep.quarantined[3]
+        # next observation re-evaluates pendings against the free slot
+        rep.observe(5.0, np.zeros((n,), bool), disp)
+        assert rep.quarantined[5]
+        assert rep.counts()["early_readmissions"] == 1
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

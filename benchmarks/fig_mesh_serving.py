@@ -1,0 +1,203 @@
+"""Mesh-sharded coded serving: survivor-only gather vs replicated all-gather.
+
+The worker-sharded decode tail (launch/worker_mesh.py, DESIGN.md §13)
+gathers only the ≤ ``gather_width`` SURVIVOR stream shards before the
+Berrut decode — compacted-slot scatter + psum_scatter over vocab — where
+the naive port all-gathers every one of the N+1 coded streams.  This
+module runs one coded pool decode round both ways on a real "worker"
+mesh (8 virtual CPU devices in CI) and records
+
+  * ``gathered_bytes`` — per-round collective traffic of the COMPILED
+    decode-step HLO (launch/hlo_analysis.collective_bytes).  Exactly
+    deterministic for a fixed jax version, so bench-smoke CI gates it
+    with a tight --max-ratio: a jump means the survivor-only gather
+    silently widened back toward the all-gather, not box noise.
+  * ``round_us`` (named ``*_round_us`` — informational, NOT gated) —
+    median wall-clock of the end-to-end jitted pool round per mode.
+    8 virtual devices time-slice one physical CPU core on CI runners,
+    so absolute latency there is noise; the bytes are the contract.
+
+Needs ≥ ``coding.num_workers`` devices; standalone invocation forces 8
+virtual CPU devices via XLA_FLAGS (merged, never clobbered — the CI leg
+and users keep their own flags).  Under fewer devices (e.g. when
+another benchmark already initialised single-device jax in the same
+process) it degrades to the widest worker axis that still divides N+1
+and says so in the output.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.fig_mesh_serving --smoke \\
+      --json benchmarks/results/FIG_mesh_serving.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _ensure_virtual_devices(count: int = 8) -> None:
+    """Request virtual CPU devices; only effective before jax wakes up,
+    and only when the caller has not already pinned a device count."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={count}"
+        ).strip()
+
+
+def _widest_worker_axis(num_workers: int, devices: int) -> int:
+    w = 1
+    for cand in range(1, min(num_workers, devices) + 1):
+        if num_workers % cand == 0:
+            w = cand
+    return w
+
+
+def _mode_cell(cfg, coding, params, mode, workers, pool_groups, prompt_len,
+               rounds, reps, emit):
+    """One gather mode on a fresh worker mesh: timed rounds + HLO bytes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_worker_mesh
+    from repro.launch.worker_mesh import WorkerShardConfig
+    from repro.models import partitioning
+    from repro.serving.continuous import ContinuousLLMExecutor
+
+    wshard = WorkerShardConfig(mode=mode)
+    mesh = make_worker_mesh(workers)
+    with mesh, partitioning.logical_sharding_context(mesh):
+        executor = ContinuousLLMExecutor(
+            cfg, coding, params, pool_groups=pool_groups,
+            max_len=prompt_len + rounds * reps + 8, wshard=wshard)
+        state = executor.init_state()
+        pk = pool_groups * coding.k
+        rng = np.random.RandomState(0)
+        prompts = rng.randint(0, cfg.vocab_size,
+                              (pk, prompt_len)).astype(np.int32)
+        ones_p = np.ones((pool_groups,), np.float32)
+        ones_w = np.ones((coding.num_workers,), np.float32)
+        tokens, state, _ = executor.prefill(state, prompts, ones_p, ones_w)
+        token_buf = tokens.reshape(pk, 1).astype(np.int32)
+
+        # collective accounting on the SAME program the executor runs:
+        # lower (no execution, so the donated state is untouched) the
+        # jitted decode step and parse its post-SPMD HLO
+        largs = (executor.params, executor.init_state(),
+                 jnp.asarray(token_buf), jnp.asarray(ones_p),
+                 jnp.asarray(ones_w),
+                 jnp.zeros((coding.num_workers,), jnp.float32),
+                 jax.random.PRNGKey(0), jnp.asarray(0.0, jnp.float32),
+                 jax.random.PRNGKey(1))
+        text = executor._decode.lower(*largs).compile().as_text()
+        coll = hlo_analysis.collective_bytes(text)
+
+        # warmup compiles the executing path once; then timed rounds
+        tokens, state, _ = executor.decode(state, token_buf, ones_p, ones_w)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                tokens, state, _ = executor.decode(state, token_buf,
+                                                   ones_p, ones_w)
+            ts.append((time.perf_counter() - t0) / rounds * 1e6)
+    round_us = float(np.median(ts))
+
+    width = wshard.resolved_width(coding)
+    cell = {
+        "mode": mode, "workers": workers, "k": coding.k, "s": coding.s,
+        "e": coding.e, "pool_groups": pool_groups,
+        "gather_width": width if mode == "survivor" else coding.num_workers,
+        "gathered_bytes": float(coll.get("total", 0.0)),
+        "collectives": {k: v for k, v in coll.items()
+                        if k not in ("counts", "total")},
+        "mode_round_us": round_us,
+        "tokens_per_s": pk / (round_us / 1e6),
+    }
+    key = (f"{mode}_w{workers}_k{coding.k}s{coding.s}e{coding.e}"
+           f"_p{pool_groups}")
+    emit(f"fig_mesh_serving/{key}", round_us,
+         f"gathered_bytes={cell['gathered_bytes']:.0f};"
+         f"width={cell['gather_width']}/{coding.num_workers}")
+    return key, cell
+
+
+def run(emit=None):
+    import jax
+
+    from benchmarks import common
+    from repro import configs
+    from repro.core.berrut import CodingConfig
+    from repro.models import init_params
+
+    emit = emit or common.emit
+    smoke = common.SMOKE
+    # K=2,S=2,E=1 -> N+1 = 2(K+E)+S = 8 coded streams, locator quorum 4:
+    # every power-of-two worker axis up to 8 divides the stream count
+    coding = CodingConfig(k=2, s=2, e=1)
+    ndev = len(jax.devices())
+    workers = _widest_worker_axis(coding.num_workers, ndev)
+    out = {"smoke": smoke, "schema": 1, "devices": ndev,
+           "workers": workers, "mesh": {}}
+    if workers < 2:
+        # single-device fallback: no collectives to measure — emit a
+        # skip marker instead of fabricating a degenerate baseline
+        out["skipped"] = (f"{ndev} device(s) < 2: set "
+                          "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        print(f"# fig_mesh_serving: {out['skipped']}", file=sys.stderr)
+        return out
+
+    cfg = configs.get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if smoke:
+        pools, prompt_len, rounds, reps = [2], 8, 3, 3
+    else:
+        pools, prompt_len, rounds, reps = [2, 4], 8, 8, 7
+
+    for pool_groups in pools:
+        cells = {}
+        for mode in ("survivor", "replicated"):
+            key, cell = _mode_cell(cfg, coding, params, mode, workers,
+                                   pool_groups, prompt_len, rounds, reps,
+                                   emit)
+            cells[mode] = cell
+            out["mesh"][key] = cell
+        surv, repl = cells["survivor"], cells["replicated"]
+        if repl["gathered_bytes"] > 0:
+            # informational ratio; the gate tracks the absolute bytes
+            surv["bytes_vs_replicated"] = (surv["gathered_bytes"]
+                                           / repl["gathered_bytes"])
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shapes mode (REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the result document as JSON")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # must precede the benchmarks.common import inside run()
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    _ensure_virtual_devices(8)    # before any jax import in run()
+    print("name,us_per_call,derived")
+    out = run()
+    if args.json:
+        path = os.path.abspath(args.json)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(out, fh, indent=1)
+        print(f"# wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -55,7 +55,7 @@ def main(argv=None) -> None:
                             fig_acc_trained_lm, fig_acc_vs_e,
                             fig_acc_vs_k, fig_acc_vs_s,
                             fig_adaptive_redundancy, fig_byzantine_serving,
-                            fig_scheme_faceoff, fig_sigma,
+                            fig_mesh_serving, fig_scheme_faceoff, fig_sigma,
                             fig_cvote_ablation, fig_systematic,
                             fig_tail_latency, roofline_table,
                             table_overhead)
@@ -75,6 +75,8 @@ def main(argv=None) -> None:
          fig_byzantine_serving),
         ("fig_adaptive_redundancy (DESIGN §12 closed loop)",
          fig_adaptive_redundancy),
+        ("fig_mesh_serving (DESIGN §13 survivor-only gather)",
+         fig_mesh_serving),
         ("fig_scheme_faceoff (paper Figs 3/5/6 + §1 overhead, one sweep)",
          fig_scheme_faceoff),
         ("table_overhead (paper §1/§4)", table_overhead),

@@ -29,11 +29,15 @@ import sys
 # informational — absolute timings on shared boxes burst 2-3x
 # (EXPERIMENTS.md §9), so gating every raw field would make the job
 # flaky without guarding anything users run.
-_GATED = ("fused_us", "encode_us", "round_us", "p99_ms")
+_GATED = ("fused_us", "encode_us", "round_us", "p99_ms", "gathered_bytes")
 
 
 def _cells(doc):
-    for section in ("tail", "round"):
+    # fig_mesh_serving --json: per-gather-mode cells whose
+    # ``gathered_bytes`` come from compiled-HLO collective accounting —
+    # deterministic, so CI gates them with a tight --max-ratio (a jump
+    # means the survivor-only gather silently widened, not noise)
+    for section in ("tail", "round", "mesh"):
         for key, cell in (doc.get(section) or {}).items():
             yield f"{section}.{key}", cell
     for cell in doc.get("encode") or []:

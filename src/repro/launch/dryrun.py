@@ -1,5 +1,21 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+
+def merge_device_count_flag(existing: str, count: int) -> str:
+    """Merge --xla_force_host_platform_device_count into an XLA_FLAGS value.
+
+    The dry-run needs many virtual CPU devices, but CI legs (and users)
+    may have set their own device count or unrelated XLA flags — append
+    ours only if the device-count flag is absent, never clobber.
+    """
+    if "--xla_force_host_platform_device_count" in existing:
+        return existing
+    flag = f"--xla_force_host_platform_device_count={count}"
+    return f"{existing} {flag}".strip()
+
+
+os.environ["XLA_FLAGS"] = merge_device_count_flag(
+    os.environ.get("XLA_FLAGS", ""), 512)
 
 """Multi-pod dry-run (assignment deliverable e).
 

@@ -9,24 +9,62 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: jax < 0.5 has neither
+    ``jax.sharding.AxisType`` nor the ``axis_types`` kwarg."""
+    if hasattr(jax.sharding, "AxisType"):
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2x16x16 = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over the actually-present devices (tests/examples)."""
+def make_host_mesh(data: int = 1, model: int = 1, worker: int = 1):
+    """Small mesh over the actually-present devices (tests/examples).
+
+    ``worker > 1`` prepends the serving "worker" axis (coded streams are
+    worker-major over it, DESIGN.md §13); ``worker == 1`` keeps the exact
+    pre-existing 2-axis ("data", "model") mesh so train paths are
+    unchanged.
+    """
     n = len(jax.devices())
-    if data * model > n:
-        raise ValueError(f"mesh {data}x{model} > {n} devices")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    if worker * data * model > n:
+        raise ValueError(f"mesh {worker}x{data}x{model} > {n} devices")
+    if worker == 1:
+        return _make_mesh((data, model), ("data", "model"))
+    return _make_mesh((worker, data, model), ("worker", "data", "model"))
+
+
+def make_worker_mesh(workers: int, model: int = 1):
+    """Serving mesh: one rank per coded worker (× optional model axis).
+
+    Each rank along "worker" owns a contiguous block of the N+1 coded
+    streams (worker-major layout) — a straggling/Byzantine worker is an
+    *actual device*, and the decode tail gathers only survivor shards.
+    """
+    n = len(jax.devices())
+    if workers * model > n:
+        raise ValueError(
+            f"worker mesh {workers}x{model} needs {workers * model} devices, "
+            f"have {n} (set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return _make_mesh((workers, model), ("worker", "model"))
+
+
+def make_production_serving_mesh(*, workers: int = 16, model: int = 16,
+                                 multi_pod: bool = False):
+    """256-chip serving pod: 16 coded workers × 16-way tensor parallel.
+
+    Multi-pod adds a leading "pod" axis (data-parallel pool replicas).
+    """
+    if multi_pod:
+        return _make_mesh((2, workers, model), ("pod", "worker", "model"))
+    return _make_mesh((workers, model), ("worker", "model"))
 
 
 # TPU v5e hardware constants for the roofline (assignment §Roofline).

@@ -46,6 +46,101 @@ def global_batch_from_host_shard(mesh, host_batch: dict):
     return out
 
 
+def host_worker_ranks(mesh) -> list:
+    """The "worker"-axis ranks whose coded streams live on THIS process.
+
+    Worker-major stream layout (DESIGN.md §13): rank w of a W-way
+    "worker" axis owns the contiguous streams [w*(N+1)/W, (w+1)*(N+1)/W).
+    On a multi-host serving pod each process feeds — and, on preemption,
+    restores — only the pool-KV shard of its own ranks; everything else
+    never leaves the other hosts.  Meshes without a "worker" axis have a
+    single degenerate rank 0 (the whole pool).
+    """
+    import jax
+    if "worker" not in mesh.axis_names:
+        return [0]
+    ax = mesh.axis_names.index("worker")
+    pid = jax.process_index()
+    ranks = {idx[ax] for idx, dev in np.ndenumerate(mesh.devices)
+             if dev.process_index == pid}
+    return sorted(ranks)
+
+
+def global_pool_from_host_shard(mesh, host_pool: dict):
+    """Assemble GLOBAL worker-major pool arrays from per-process shards.
+
+    Pool-KV arrays carry the flat coded-stream axis first (worker-major
+    when sharded, DESIGN.md §13); each process supplies the rows of its
+    own worker ranks (``host_worker_ranks``) and the result carries the
+    P("worker", ...) NamedSharding the jitted pool steps expect.  Without
+    a "worker" axis this degenerates to full replication — the
+    single-process case returns arrays bit-identical to its input.
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axis = "worker" if "worker" in mesh.axis_names else None
+    out = {}
+    for k, v in host_pool.items():
+        spec = P(axis, *([None] * (v.ndim - 1)))
+        sharding = NamedSharding(mesh, spec)
+        out[k] = jax.make_array_from_process_local_data(sharding, v)
+    return out
+
+
+def serve_main(jax, args):
+    """Mesh-sharded coded serving pool (--mode serve).
+
+    One "worker"-mesh rank per block of coded streams; decode gathers
+    only survivor shards (launch/worker_mesh.py).  Structure — mesh
+    construction, wshard threading, per-process pool ownership — is what
+    the dry-run and the 8-virtual-device CI leg exercise; this entrypoint
+    adds the real multi-host initialize() on hardware.
+    """
+    from repro import configs
+    from repro.core.berrut import CodingConfig
+    from repro.launch.mesh import make_production_serving_mesh
+    from repro.launch.worker_mesh import WorkerShardConfig
+    from repro.models import init_params, logical_axes, partitioning
+    from repro.launch import shardings
+    from repro.serving.continuous import ContinuousLLMExecutor
+
+    coding = CodingConfig(k=args.k, s=args.s, e=args.e)
+    mesh = make_production_serving_mesh(multi_pod=args.multi_pod)
+    wsize = dict(zip(mesh.axis_names, mesh.devices.shape))["worker"]
+    if coding.num_workers % wsize:
+        raise ValueError(
+            f"N+1={coding.num_workers} coded streams do not shard over "
+            f"the {wsize}-way worker axis (choose K, S, E so 2(K+E)+S "
+            f"is a multiple of {wsize})")
+    cfg = configs.get_config(args.arch).with_updates(
+        param_dtype="bfloat16", activation_dtype="bfloat16")
+    ranks = host_worker_ranks(mesh)
+    print(f"process {jax.process_index()}: worker ranks {ranks} "
+          f"(streams/rank {coding.num_workers // wsize})")
+    with mesh, partitioning.logical_sharding_context(mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        params = jax.device_put(params, shardings.tree_shardings(
+            mesh, logical_axes(cfg), params))
+        ex = ContinuousLLMExecutor(
+            cfg, coding, params, pool_groups=args.pool_groups,
+            max_len=args.max_len,
+            wshard=WorkerShardConfig(gather_width=coding.num_workers))
+        state = ex.init_state()
+        g = args.pool_groups
+        rng = np.random.RandomState(0)
+        prompts = rng.randint(0, cfg.vocab_size,
+                              (g * coding.k, args.max_len // 2))
+        admit = np.ones((g,), np.float32)
+        full = np.ones((coding.num_workers,), np.float32)
+        tokens, state, _ = ex.prefill(state, prompts, admit, full)
+        for i in range(args.steps):
+            tokens, state, _ = ex.decode(
+                state, tokens.reshape(-1, 1), admit, full)
+            if jax.process_index() == 0 and i % 10 == 0:
+                print(f"decode step {i}: tokens {tokens[:4]}...")
+
+
 def main(argv: Optional[list] = None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--coordinator", required=True)
@@ -55,9 +150,19 @@ def main(argv: Optional[list] = None):
     ap.add_argument("--mode", choices=("train", "serve"), default="train")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
+    # serve-mode coding + pool knobs (K=7,S=2,E=0 -> exactly 16 coded
+    # streams, one per rank of the 16-way production worker axis)
+    ap.add_argument("--k", type=int, default=7)
+    ap.add_argument("--s", type=int, default=2)
+    ap.add_argument("--e", type=int, default=0)
+    ap.add_argument("--pool-groups", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
     args = ap.parse_args(argv)
 
     jax = initialize(args.coordinator, args.num_processes, args.process_id)
+    if args.mode == "serve":
+        serve_main(jax, args)
+        return
     from repro import configs
     from repro.data import SyntheticLMDataset
     from repro.launch import shardings

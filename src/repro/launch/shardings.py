@@ -28,14 +28,17 @@ def tree_shardings(mesh: Mesh, axes_tree, shapes_tree,
 
 def batch_sharding(mesh: Mesh, ndim: int,
                    batch_size: Optional[int] = None) -> NamedSharding:
-    """Shard the leading (batch) axis over ("pod","data").
+    """Shard the leading (batch) axis over ("worker","pod","data").
 
     Falls back to the largest divisible prefix of the axes — and to
     replication for batch=1 (long_500k) — since pjit rejects non-divisible
-    input shardings.
+    input shardings.  The "worker" axis only exists on serving meshes
+    (worker-major coded streams, DESIGN.md §13); train meshes are
+    unaffected.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axes = tuple(a for a in ("worker", "pod", "data")
+                 if a in mesh.axis_names)
     if batch_size is not None:
         while axes:
             total = 1
@@ -43,7 +46,7 @@ def batch_sharding(mesh: Mesh, ndim: int,
                 total *= sizes[a]
             if batch_size % total == 0:
                 break
-            axes = axes[1:]   # drop "pod" first, then "data"
+            axes = axes[1:]   # drop "worker" first, then "pod"
     if not axes:
         return NamedSharding(mesh, P(*([None] * ndim)))
     spec = P(axes if len(axes) > 1 else axes[0], *([None] * (ndim - 1)))

@@ -19,7 +19,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # Entries may be a single mesh axis, a tuple of axes, or None (replicated).
 # "batch"/"fsdp" pick up the "pod" axis automatically when it exists.
 DEFAULT_RULES = {
-    "batch": ("pod", "data"),       # coded-stream / batch axis
+    # The "worker" axis only exists on serving meshes (launch/mesh.py
+    # make_worker_mesh): coded streams laid out worker-major shard over it
+    # so each mesh rank IS an ApproxIFER worker.  Absent axes are dropped
+    # by resolve_spec, so train meshes are unaffected.
+    "batch": ("worker", "pod", "data"),  # coded-stream / batch axis
     "seq": None,                    # sequence (context parallel = perf lever)
     "d_model": None,                # residual stream stays replicated
     "heads": "model",               # attention q heads
@@ -40,7 +44,7 @@ DEFAULT_RULES = {
     # grok-1 train before this fix — EXPERIMENTS.md §Perf grok iteration 1.)
     "groups": ("pod", "data"),
     "capacity": None,
-    "workers": None,                # coded-stream axis inside a group
+    "workers": "worker",            # coded-stream axis inside a group
     # flattened feature axis of the Berrut encode/decode contraction: the
     # group axis is tiny (G ~ 4), so the feature axis carries ALL the
     # parallelism during coding (§Perf iteration 5)
@@ -76,6 +80,16 @@ def logical_sharding_context(mesh: Mesh, rules: Optional[dict] = None):
         yield
     finally:
         _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh of the enclosing ``logical_sharding_context`` (or None).
+
+    Serving code (launch/worker_mesh.py) uses this at trace time to decide
+    between the sharded survivor-gather tail and the single-device
+    degenerate path — the SAME jitted program source serves both.
+    """
+    return _CTX.mesh
 
 
 def _axis_size(mesh: Mesh, phys) -> int:
@@ -140,7 +154,7 @@ def padded_batch(n: int) -> int:
         return n
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     p = 1
-    for a in ("pod", "data"):
+    for a in ("worker", "pod", "data"):
         p *= sizes.get(a, 1)
     return -(-n // p) * p
 

@@ -24,6 +24,7 @@ from repro.core.error_locator import gather_vote_values, locate_groups
 from repro.kernels import ops
 from repro.models import decode_step, embed_inputs, init_caches, prefill
 from repro.models.config import ModelConfig
+from repro.launch.worker_mesh import WorkerShardConfig
 from repro.models.partitioning import shard
 from repro.serving.sampling import SampleConfig, sample_tokens
 
@@ -35,10 +36,18 @@ def num_padded_streams(coding: CodingConfig, groups: int) -> int:
     return padded_batch(groups * coding.num_workers)
 
 
-def _code_streams(coding: CodingConfig, x: jnp.ndarray) -> jnp.ndarray:
+def _code_streams(coding: CodingConfig, x: jnp.ndarray,
+                  worker_major: bool = False) -> jnp.ndarray:
     """(G, K, ...) -> (padded_streams, ...) coded streams via the Berrut
     encode contraction (kernel-dispatched).  Padding streams repeat stream
-    0 and are sliced off after decode."""
+    0 and are sliced off after decode.
+
+    Default layout is group-major (stream ``g*(N+1) + n``).  With
+    ``worker_major`` the flat axis is ``n*G + g`` so a contiguous 1/W
+    slice along it is exactly one worker rank's streams — what the
+    "worker" mesh axis shards (DESIGN.md §13).  Worker-major requires
+    exact divisibility (no padding streams: appending them would break
+    the (N+1, G) block structure)."""
     g = x.shape[0]
     w = berrut.encode_matrix(coding).astype(x.dtype)      # (N+1, K)
     flat = x.reshape(g, coding.k, -1)
@@ -47,6 +56,16 @@ def _code_streams(coding: CodingConfig, x: jnp.ndarray) -> jnp.ndarray:
     flat = shard(flat, None, None, "coded_flat")
     coded = ops.berrut_apply(w, flat)                     # (G, N+1, F)
     coded = shard(coded, None, None, "coded_flat")
+    if worker_major:
+        coded = jnp.swapaxes(coded, 0, 1)                 # (N+1, G, F)
+        coded = coded.reshape(g * coding.num_workers, *x.shape[2:])
+        if num_padded_streams(coding, g) != coded.shape[0]:
+            raise ValueError(
+                "worker-major coded streams cannot be padded: "
+                f"{coded.shape[0]} streams vs mesh batch product "
+                f"{num_padded_streams(coding, g)} (make N+1 divisible "
+                "by the worker axis)")
+        return shard(coded, "batch", *([None] * (coded.ndim - 1)))
     coded = coded.reshape(g * coding.num_workers, *x.shape[2:])
     pad = num_padded_streams(coding, g) - coded.shape[0]
     if pad:
@@ -63,7 +82,7 @@ def _real_streams(coding: CodingConfig, coded_logits: jnp.ndarray,
 
 
 def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
-           avail: jnp.ndarray
+           avail: jnp.ndarray, worker_major: bool = False
            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Vote-gated Algorithm 2 per group over in-program coded logits.
 
@@ -83,8 +102,15 @@ def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
         masks = jnp.broadcast_to(avail, (g, coding.num_workers))
         zeros = jnp.zeros((g, coding.num_workers), jnp.int32)
         return masks, zeros.astype(bool), zeros
-    vals = gather_vote_values(
-        coded_logits.reshape(g, coding.num_workers, -1), coding.c_vote)
+    if worker_major:
+        # (N+1, G, V) blocks: gather the tiny vote slice first, THEN
+        # transpose — only (N+1, G, C_vote) values ever move
+        vals = jnp.swapaxes(gather_vote_values(
+            coded_logits.reshape(coding.num_workers, g, -1),
+            coding.c_vote), 0, 1)
+    else:
+        vals = gather_vote_values(
+            coded_logits.reshape(g, coding.num_workers, -1), coding.c_vote)
     betas = jnp.asarray(coding.betas, jnp.float32)
     located, votes = locate_groups(betas, vals, avail,
                                    k=coding.k, e=coding.e)
@@ -94,21 +120,30 @@ def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
 
 def _corrupt_logits(coding: CodingConfig, coded_logits: jnp.ndarray,
                     byz_mask: jnp.ndarray, byz_rng: jax.Array,
-                    sigma: float, collude: bool) -> jnp.ndarray:
+                    sigma: float, collude: bool,
+                    worker_major: bool = False) -> jnp.ndarray:
     """Byzantine workers corrupt their coded logits (paper §4.2).  With
-    ``collude`` every compromised worker in a group tells the SAME lie."""
+    ``collude`` every compromised worker in a group tells the SAME lie.
+
+    The noise draw is layout-aware so group-major and worker-major runs
+    corrupt stream (n, g) with the SAME value given the same rng.
+    """
     g = coded_logits.shape[0] // coding.num_workers
     v = coded_logits.shape[-1]
     if collude:
         noise = jax.random.normal(byz_rng, (g, 1, v), coded_logits.dtype)
-        noise = jnp.broadcast_to(
-            noise, (g, coding.num_workers, v)).reshape(g * coding.num_workers,
-                                                       v)
+        noise = jnp.broadcast_to(noise, (g, coding.num_workers, v))
     else:
-        noise = jax.random.normal(byz_rng, coded_logits.shape,
-                                  coded_logits.dtype)
-    per_stream = jnp.tile(byz_mask, (g,))
-    return coded_logits + sigma * per_stream[:, None] * noise
+        noise = jax.random.normal(
+            byz_rng, (g, coding.num_workers, v), coded_logits.dtype)
+    if worker_major:
+        noise = jnp.swapaxes(noise, 0, 1)
+        per_stream = jnp.repeat(byz_mask, g)
+    else:
+        per_stream = jnp.tile(byz_mask, (g,))
+    return (coded_logits
+            + sigma * per_stream[:, None]
+            * noise.reshape(g * coding.num_workers, v))
 
 
 # Trace-time side effects: incremented once per jit compilation of the
@@ -162,6 +197,38 @@ def _finish_round(coding: CodingConfig, coded_logits: jnp.ndarray,
     return logits, None
 
 
+def _finish_round_wm(coding: CodingConfig, coded_logits: jnp.ndarray,
+                     straggler_mask: Optional[jnp.ndarray],
+                     with_report: bool, wshard: WorkerShardConfig,
+                     sample: Optional[SampleConfig],
+                     sample_rng: Optional[jax.Array],
+                     row_mask: Optional[jnp.ndarray] = None):
+    """Worker-sharded round tail (DESIGN.md §13).
+
+    The coded logits arrive worker-major — stream ``n*G + g`` — so the
+    flat axis shards contiguously over the "worker" mesh axis.  Locate
+    runs on the tiny vote slice exactly as in ``_finish_round``; the
+    decode is the survivor-only gather + compacted fused decode +
+    on-shard sampling of ``launch.worker_mesh.survivor_decode_tail``
+    (sampling must happen inside the sharded tail so the full decoded
+    logits never materialise on one device).  Returns ``(out, report)``
+    where ``out`` is (G*K,) token ids with ``sample`` else (G*K, V)
+    logits.
+    """
+    from repro.launch import worker_mesh
+    avail = (straggler_mask if straggler_mask is not None
+             else jnp.ones((coding.num_workers,), jnp.float32))
+    v = coded_logits.shape[-1]
+    g = coded_logits.shape[0] // coding.num_workers
+    masks, located, votes = locate(coding, coded_logits, avail,
+                                   worker_major=True)
+    block = coded_logits.reshape(coding.num_workers, g, v)
+    out = worker_mesh.survivor_decode_tail(
+        coding, block, masks, avail, wshard, row_mask=row_mask,
+        sample=sample, sample_rng=sample_rng)
+    return out, ((located, votes) if with_report else None)
+
+
 def _maybe_sample(logits: jnp.ndarray, sample: Optional[SampleConfig],
                   sample_rng: Optional[jax.Array]) -> jnp.ndarray:
     """On-device token selection (DESIGN.md §11): with a ``SampleConfig``
@@ -182,7 +249,8 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                   byz_sigma: float = 10.0, byz_collude: bool = False,
                   with_report: bool = False,
                   sample: Optional[SampleConfig] = None,
-                  sample_rng: Optional[jax.Array] = None):
+                  sample_rng: Optional[jax.Array] = None,
+                  wshard: Optional[WorkerShardConfig] = None):
     """Prefill G*K real prompts as G*(N+1) coded streams.
 
     inputs: modality dict with leading batch = G*K real queries.
@@ -198,7 +266,9 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     x = embed_inputs(cfg, params, inputs)                 # (G*K, S, d)
     gk, s, d = x.shape
     g = gk // coding.k
-    coded = _code_streams(coding, x.reshape(g, coding.k, s, d))
+    wm = wshard is not None
+    coded = _code_streams(coding, x.reshape(g, coding.k, s, d),
+                          worker_major=wm)
     caches = init_caches(cfg, coded.shape[0], max_len,
                          dtype=cache_dtype or coded.dtype)
     coded_logits, caches = prefill(cfg, params, {"embeddings": coded},
@@ -206,10 +276,16 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     coded_logits = _real_streams(coding, coded_logits, g)
     if byz_mask is not None and byz_rng is not None:
         coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
-                                       byz_rng, byz_sigma, byz_collude)
-    logits, report = _finish_round(coding, coded_logits, straggler_mask,
-                                   with_report)
-    out = _maybe_sample(logits, sample, sample_rng)
+                                       byz_rng, byz_sigma, byz_collude,
+                                       worker_major=wm)
+    if wm:
+        out, report = _finish_round_wm(coding, coded_logits,
+                                       straggler_mask, with_report,
+                                       wshard, sample, sample_rng)
+    else:
+        logits, report = _finish_round(coding, coded_logits,
+                                       straggler_mask, with_report)
+        out = _maybe_sample(logits, sample, sample_rng)
     state = CodedServingState(caches=caches,
                               pos=jnp.asarray(s, jnp.int32))
     if with_report:
@@ -225,7 +301,8 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
                       byz_sigma: float = 10.0, byz_collude: bool = False,
                       with_report: bool = False,
                       sample: Optional[SampleConfig] = None,
-                      sample_rng: Optional[jax.Array] = None):
+                      sample_rng: Optional[jax.Array] = None,
+                      wshard: Optional[WorkerShardConfig] = None):
     """One coded decode step.
 
     tokens: (G*K, 1) int32 — the sampled next token of each REAL stream.
@@ -243,16 +320,24 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
     x = _layers.embed_tokens(cfg, params["embeddings"], tokens)  # (G*K,1,d)
     gk, _, d = x.shape
     g = gk // coding.k
-    coded = _code_streams(coding, x.reshape(g, coding.k, 1, d))
+    wm = wshard is not None
+    coded = _code_streams(coding, x.reshape(g, coding.k, 1, d),
+                          worker_major=wm)
     coded_logits, caches = decode_step(cfg, params, state.caches,
                                        {"embeddings": coded}, state.pos)
     coded_logits = _real_streams(coding, coded_logits, g)
     if byz_mask is not None and byz_rng is not None:
         coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
-                                       byz_rng, byz_sigma, byz_collude)
-    logits, report = _finish_round(coding, coded_logits, straggler_mask,
-                                   with_report)
-    out = _maybe_sample(logits, sample, sample_rng)
+                                       byz_rng, byz_sigma, byz_collude,
+                                       worker_major=wm)
+    if wm:
+        out, report = _finish_round_wm(coding, coded_logits,
+                                       straggler_mask, with_report,
+                                       wshard, sample, sample_rng)
+    else:
+        logits, report = _finish_round(coding, coded_logits,
+                                       straggler_mask, with_report)
+        out = _maybe_sample(logits, sample, sample_rng)
     new_state = CodedServingState(caches=caches, pos=state.pos + 1)
     if with_report:
         return out, new_state, report
@@ -301,12 +386,16 @@ def init_pool_state(cfg: ModelConfig, coding: CodingConfig,
 
 
 def _stream_mask(coding: CodingConfig, group_mask: jnp.ndarray,
-                 padded_streams: int) -> jnp.ndarray:
+                 padded_streams: int,
+                 worker_major: bool = False) -> jnp.ndarray:
     """(P,) group-slot mask -> (padded_streams,) coded-stream mask.
 
     Divisibility-padding streams are always 0: they repeat stream 0's
     content but must never overwrite a live slot's cache."""
-    per = jnp.repeat(group_mask, coding.num_workers)
+    if worker_major:
+        per = jnp.tile(group_mask, (coding.num_workers,))
+    else:
+        per = jnp.repeat(group_mask, coding.num_workers)
     pad = padded_streams - per.shape[0]
     if pad:
         per = jnp.concatenate([per, jnp.zeros((pad,), per.dtype)])
@@ -327,15 +416,34 @@ def _merge_caches(old: list, new: list, stream_mask: jnp.ndarray) -> list:
 def _finish_pool_round(coding: CodingConfig, coded_logits: jnp.ndarray,
                        group_mask: jnp.ndarray,
                        straggler_mask: Optional[jnp.ndarray],
-                       with_report: bool):
+                       with_report: bool,
+                       wshard: Optional[WorkerShardConfig] = None,
+                       sample: Optional[SampleConfig] = None,
+                       sample_rng: Optional[jax.Array] = None):
     """``_finish_round`` with the active-slot mask composed in: free
     slots' streams are excluded from the locator's verdicts (their
     garbage logits must not feed reputation) and their decoded rows are
-    zeroed so stale slots can never leak a previous group's tokens."""
+    zeroed so stale slots can never leak a previous group's tokens.
+
+    With ``wshard`` the round returns sampled token ids / logits from
+    the sharded tail directly (row zeroing happens inside the tail,
+    before on-shard sampling); without it the caller samples via
+    ``_maybe_sample`` as before.
+    """
+    live = group_mask > 0                                  # (P,)
+    if wshard is not None:
+        per_query = jnp.repeat(group_mask, coding.k)       # (P*K,)
+        out, (located, votes) = _finish_round_wm(
+            coding, coded_logits, straggler_mask, True, wshard,
+            sample, sample_rng, row_mask=per_query)
+        located = jnp.logical_and(located, live[:, None])
+        votes = votes * live[:, None].astype(votes.dtype)
+        if with_report:
+            return out, (located, votes)
+        return out, None
     logits, report = _finish_round(coding, coded_logits, straggler_mask,
                                    with_report=True)
     located, votes = report
-    live = group_mask > 0                                  # (P,)
     located = jnp.logical_and(located, live[:, None])
     votes = votes * live[:, None].astype(votes.dtype)
     per_query = jnp.repeat(group_mask, coding.k)           # (P*K,)
@@ -355,7 +463,8 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                        byz_sigma: float = 10.0, byz_collude: bool = False,
                        with_report: bool = False,
                        sample: Optional[SampleConfig] = None,
-                       sample_rng: Optional[jax.Array] = None):
+                       sample_rng: Optional[jax.Array] = None,
+                       wshard: Optional[WorkerShardConfig] = None):
     """Prefill admitted group slots INTO the persistent pool.
 
     inputs: modality dict with leading batch = pool_groups*K query rows
@@ -379,21 +488,31 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     gk, s, d = x.shape
     g = gk // coding.k
     admit_mask = jnp.asarray(admit_mask, jnp.float32)
-    coded = _code_streams(coding, x.reshape(g, coding.k, s, d))
+    wm = wshard is not None
+    coded = _code_streams(coding, x.reshape(g, coding.k, s, d),
+                          worker_major=wm)
     dtype = cache_dtype or jax.tree.leaves(state.caches)[0].dtype
     fresh = init_caches(cfg, coded.shape[0], max_len, dtype=dtype)
     coded_logits, fresh = prefill(cfg, params, {"embeddings": coded}, fresh)
-    smask = _stream_mask(coding, admit_mask, coded.shape[0])
+    smask = _stream_mask(coding, admit_mask, coded.shape[0],
+                         worker_major=wm)
     caches = _merge_caches(state.caches, fresh, smask)
     new_pos = jnp.where(admit_mask > 0, jnp.asarray(s, jnp.int32),
                         state.pos)
     coded_logits = _real_streams(coding, coded_logits, g)
     if byz_mask is not None and byz_rng is not None:
         coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
-                                       byz_rng, byz_sigma, byz_collude)
-    logits, report = _finish_pool_round(coding, coded_logits, admit_mask,
-                                        straggler_mask, with_report)
-    out = _maybe_sample(logits, sample, sample_rng)
+                                       byz_rng, byz_sigma, byz_collude,
+                                       worker_major=wm)
+    if wm:
+        out, report = _finish_pool_round(coding, coded_logits, admit_mask,
+                                         straggler_mask, with_report,
+                                         wshard, sample, sample_rng)
+    else:
+        logits, report = _finish_pool_round(coding, coded_logits,
+                                            admit_mask, straggler_mask,
+                                            with_report)
+        out = _maybe_sample(logits, sample, sample_rng)
     new_state = CodedPoolState(caches=caches, pos=new_pos)
     if with_report:
         return out, new_state, report
@@ -410,7 +529,8 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
                            byz_collude: bool = False,
                            with_report: bool = False,
                            sample: Optional[SampleConfig] = None,
-                           sample_rng: Optional[jax.Array] = None):
+                           sample_rng: Optional[jax.Array] = None,
+                           wshard: Optional[WorkerShardConfig] = None):
     """One decode round over the WHOLE pool.
 
     tokens: (pool_groups*K, 1) int32 — the sampled next token of every
@@ -431,9 +551,14 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
     gk, _, d = x.shape
     g = gk // coding.k
     active_mask = jnp.asarray(active_mask, jnp.float32)
-    coded = _code_streams(coding, x.reshape(g, coding.k, 1, d))
+    wm = wshard is not None
+    coded = _code_streams(coding, x.reshape(g, coding.k, 1, d),
+                          worker_major=wm)
     pad = coded.shape[0] - g * coding.num_workers
-    stream_pos = jnp.repeat(state.pos, coding.num_workers)
+    if wm:
+        stream_pos = jnp.tile(state.pos, (coding.num_workers,))
+    else:
+        stream_pos = jnp.repeat(state.pos, coding.num_workers)
     if pad:
         # padding streams duplicate stream 0 — track its position too
         stream_pos = jnp.concatenate(
@@ -443,10 +568,18 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
     coded_logits = _real_streams(coding, coded_logits, g)
     if byz_mask is not None and byz_rng is not None:
         coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,
-                                       byz_rng, byz_sigma, byz_collude)
-    logits, report = _finish_pool_round(coding, coded_logits, active_mask,
-                                        straggler_mask, with_report)
-    out = _maybe_sample(logits, sample, sample_rng)
+                                       byz_rng, byz_sigma, byz_collude,
+                                       worker_major=wm)
+    if wm:
+        out, report = _finish_pool_round(coding, coded_logits,
+                                         active_mask, straggler_mask,
+                                         with_report, wshard, sample,
+                                         sample_rng)
+    else:
+        logits, report = _finish_pool_round(coding, coded_logits,
+                                            active_mask, straggler_mask,
+                                            with_report)
+        out = _maybe_sample(logits, sample, sample_rng)
     new_pos = state.pos + (active_mask > 0).astype(jnp.int32)
     new_state = CodedPoolState(caches=caches, pos=new_pos)
     if with_report:

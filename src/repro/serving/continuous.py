@@ -141,7 +141,7 @@ class ContinuousLLMExecutor:
     def __init__(self, model_cfg, coding, params, pool_groups: int,
                  max_len: int, byz_collude: bool = False,
                  sample: Optional[SampleConfig] = None,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, wshard=None):
         self.scheme = as_scheme(coding)
         if not isinstance(self.scheme, BerrutScheme):
             raise TypeError("ContinuousLLMExecutor drives the jitted "
@@ -155,6 +155,10 @@ class ContinuousLLMExecutor:
         self.max_len = max_len
         self.byz_collude = byz_collude
         self.sample = sample if sample is not None else SampleConfig()
+        # static worker-axis sharding config (DESIGN.md §13): baked into
+        # both jit programs like ``coding`` — worker-major stream layout
+        # + survivor-only gather inside, same donation/compile contracts
+        self.wshard = wshard
         self._key = jax.random.PRNGKey(sample_seed)
         sample_cfg = self.sample
         self._prefill = jax.jit(
@@ -162,14 +166,14 @@ class ContinuousLLMExecutor:
                 model_cfg, coding, p, st, {"tokens": t}, max_len, a,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
                 byz_collude=byz_collude, with_report=True,
-                sample=sample_cfg, sample_rng=sr),
+                sample=sample_cfg, sample_rng=sr, wshard=wshard),
             donate_argnums=(1,))
         self._decode = jax.jit(
             lambda p, st, t, a, m, bm, br, bs, sr: coded_pool_decode_step(
                 model_cfg, coding, p, st, t, a,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
                 byz_collude=byz_collude, with_report=True,
-                sample=sample_cfg, sample_rng=sr),
+                sample=sample_cfg, sample_rng=sr, wshard=wshard),
             donate_argnums=(1,))
 
     def init_state(self):
@@ -269,6 +273,19 @@ class ContinuousScheduler:
         self.trace: List[tuple] = []            # golden event log
         self._wait_for = (scheme.decode_quorum if config.wait_for is None
                           else config.wait_for)
+        wshard = getattr(executor, "wshard", None)
+        if wshard is not None:
+            # survivor-only decode keeps a static gather width; a round
+            # waiting for MORE responses than that would silently truncate
+            # survivors it paid latency for (DESIGN.md §13)
+            bound = max(self._wait_for, scheme.decode_quorum)
+            width = wshard.resolved_width(executor.coding)
+            if width < bound:
+                raise ValueError(
+                    f"worker-shard gather width {width} < the pool's "
+                    f"maximum wait-for {bound}: survivor-only decode would "
+                    f"drop responses the round waited for — construct the "
+                    f"executor with WorkerShardConfig(gather_width={bound})")
         if not 1 <= self._wait_for <= scheme.num_workers:
             raise ValueError(f"wait_for={self._wait_for} out of range for "
                              f"{scheme.num_workers} workers")

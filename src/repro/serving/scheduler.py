@@ -292,16 +292,25 @@ class EngineExecutor:
     # and a per-round ``locate_quorum`` (degraded rounds) to this executor
     supports_replan = True
 
-    def __init__(self, predict_fn, scheme):
+    def __init__(self, predict_fn, scheme, wshard=None):
         self.predict_fn = predict_fn
         self.scheme = as_scheme(scheme)
         # legacy alias: the Berrut CodingConfig, when this is one
         self.coding = getattr(self.scheme, "coding", None)
+        # worker-axis sharding (DESIGN.md §13): constrain the (G, W, ...)
+        # worker-payload axis to the "worker" mesh axis so each mesh
+        # rank computes its own coded streams.  None = no constraint
+        # (off-mesh unit tests keep the exact pre-sharding programs).
+        self.wshard = wshard
 
     def dispatch(self, queries, scheme=None) -> jnp.ndarray:
         scheme = self.scheme if scheme is None else as_scheme(scheme)
         q = jnp.asarray(queries)
         coded = scheme.encode(group_queries(q, scheme.k))
+        if self.wshard is not None:
+            from repro.models import partitioning
+            coded = partitioning.shard(
+                coded, None, "workers", *([None] * (coded.ndim - 2)))
         return scheme.forward(self.predict_fn, coded)
 
     def step(self, handle, round_idx: int, mask: np.ndarray,
@@ -361,7 +370,7 @@ class CodedLLMExecutor:
 
     def __init__(self, model_cfg, coding, params, steps: int,
                  max_len: int, seed: int = 0,
-                 sample: Optional[SampleConfig] = None):
+                 sample: Optional[SampleConfig] = None, wshard=None):
         from repro.core.scheme import BerrutScheme
         from repro.serving.coded_serving import (coded_decode_step,
                                                  coded_prefill)
@@ -375,6 +384,10 @@ class CodedLLMExecutor:
         self.params = params
         self.rounds = 1 + steps
         self.sample = sample if sample is not None else SampleConfig()
+        # static worker-axis sharding config (DESIGN.md §13): closed over
+        # by the jitted steps like ``coding`` — same donation and
+        # compile-count contracts, worker-major stream layout inside
+        self.wshard = wshard
         self._key = jax.random.PRNGKey(seed)
         sample_cfg = self.sample
         self._prefill = jax.jit(
@@ -382,13 +395,14 @@ class CodedLLMExecutor:
                 model_cfg, coding, p, {"tokens": t}, max_len=max_len,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
                 byz_collude=collude, with_report=True,
-                sample=sample_cfg, sample_rng=sr),
+                sample=sample_cfg, sample_rng=sr, wshard=wshard),
             static_argnums=(7,))
         self._decode = jax.jit(
             lambda p, st, t, m, bm, br, bs, sr, collude: coded_decode_step(
                 model_cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm,
                 byz_rng=br, byz_sigma=bs, byz_collude=collude,
-                with_report=True, sample=sample_cfg, sample_rng=sr),
+                with_report=True, sample=sample_cfg, sample_rng=sr,
+                wshard=wshard),
             static_argnums=(8,), donate_argnums=(1,))
 
     @staticmethod
@@ -490,6 +504,20 @@ class CodedScheduler:
                 f"({declared.config}) but the executor runs "
                 f"{scheme.name!r} ({scheme.config})")
         self.scheme = scheme
+        wshard = getattr(executor, "wshard", None)
+        if wshard is not None and isinstance(executor, CodedLLMExecutor):
+            # survivor-only decode keeps a static gather width; a round
+            # that waits for MORE responses than that would silently
+            # truncate survivors it paid latency for (DESIGN.md §13)
+            bound = max(config.wait_for or scheme.decode_quorum,
+                        scheme.decode_quorum)
+            width = wshard.resolved_width(executor.coding)
+            if width < bound:
+                raise ValueError(
+                    f"worker-shard gather width {width} < the scheduler's "
+                    f"maximum wait-for {bound}: survivor-only decode would "
+                    f"drop responses the round waited for — construct the "
+                    f"executor with WorkerShardConfig(gather_width={bound})")
         self.controller = config.controller
         if self.controller is not None:
             if not getattr(executor, "supports_replan", False):

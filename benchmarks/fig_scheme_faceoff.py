@@ -1,32 +1,41 @@
-"""Scheme faceoff: Berrut vs ParM vs replication vs uncoded, one sweep.
+"""Scheme faceoff: every registered scheme, one shared serving trace.
 
 The paper's comparative claims (Figs. 3/5/6 accuracy vs ParM, §1/§4
 overhead vs replication) reproduced through ONE pipeline instead of
-scattered scripts: every registered ``RedundancyScheme`` serves the
-*same* Poisson traffic trace through the *same* event-driven
-``CodedScheduler`` (same arrival clock, same worker-latency stream
-seed), so accuracy, overhead, and tail latency are directly comparable.
+scattered scripts: the schemes are enumerated from the registry
+(``list_schemes()`` — a newly registered scheme appears here without
+touching this file), and every one serves the *same* Poisson traffic
+trace through the *same* event-driven ``CodedScheduler`` (same arrival
+clock, same worker-latency stream seed), so accuracy, overhead, and
+tail latency are directly comparable.
 
 Two facets:
 
-  * straggler facet (E=0): all four schemes, heavy-tailed worker
-    latencies, adaptive wait-for per scheme — uncoded waits for all K,
-    ParM/Berrut for K of K+1 / N+1-S, replication for (S+1)K - S.
-  * Byzantine facet (E=1): berrut (locator + exclusion, 2(K+E)+S
-    workers), replication (median over 2E+1 replicas, (2E+1)K workers),
-    and uncoded (defenseless) under a persistent adversary.  ParM has
-    no Byzantine recovery and sits this facet out.
+  * straggler facet (E=0): every scheme at equal redundancy S=1 —
+    uncoded, (S+1)-replication, ParM, Berrut (+ its systematic
+    variant), NeRCC, Coded-InvNet — heavy-tailed worker latencies,
+    adaptive wait-for per scheme.
+  * Byzantine facet (E=1): every scheme that *has* an E=1 operating
+    point (berrut and nercc run their vote-gated locators, replication
+    its 2E+1 median) plus uncoded as the defenseless baseline, under a
+    persistent adversary.  Schemes without Byzantine recovery (parm,
+    invnet) are skipped by construction — their configs reject e > 0.
 
 Reported per cell: test accuracy, top-1 agreement with the clean
-uncoded model, worker overhead, p50/p99 latency.  One CSV/JSON row per
-scheme per facet.
+uncoded model, worker overhead, p50/p99 latency.  ``--schemes`` filters
+by name; ``--json`` writes the cells under a ``"schemes"`` section that
+``scripts/check_bench_regression.py`` gates with per-scheme agreement
+floors (the event clock is exact-seeded, so agreement only moves when
+the coding math does).
 
-  PYTHONPATH=src python -m benchmarks.fig_scheme_faceoff --smoke
+  PYTHONPATH=src python -m benchmarks.fig_scheme_faceoff --smoke \\
+      --schemes berrut,nercc --json results.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -34,6 +43,9 @@ import numpy as np
 
 K, S, E_BYZ, SIGMA = 4, 1, 1, 50.0
 RATE_RPS = 20_000.0
+# scheme-specific constructor extras for the Byzantine facet (keyed by
+# registry name): narrow vote width keeps the smoke locator cheap
+_BYZ_KWARGS = {"berrut": {"c_vote": 10}, "nercc": {"c_vote": 10}}
 
 
 def _serve(scheme, f, payloads, arrivals, adversary=None, seed=0):
@@ -67,14 +79,55 @@ def _cell(emit, out, facet, name, scheme, metrics, served, clean, labels):
     return out[tag]
 
 
-def run(emit=None):
+def _straggler_variants(name, get_scheme, common):
+    """(variant-name, scheme) cells for the E=0 facet of one registered
+    scheme — at EQUAL redundancy S=1 wherever the scheme has a knob."""
+    if name == "uncoded":
+        return [("uncoded", get_scheme("uncoded", k=K))]
+    if name == "parm":
+        return [("parm", get_scheme("parm", k=K, s=S,
+                                    parity_fn=common.parity_fn(K)))]
+    variants = [(name, get_scheme(name, k=K, s=S))]
+    if name == "berrut":
+        variants.append(("berrut_systematic",
+                         get_scheme(name, k=K, s=S, systematic=True)))
+    return variants
+
+
+def _byzantine_variant(name, get_scheme):
+    """The E=1 operating point, or None when the scheme has none.
+
+    uncoded ignores (s, e) by design — it serves the facet as the
+    defenseless baseline; schemes whose configs reject e > 0 (parm,
+    invnet) sit the facet out, discovered by the ValueError itself
+    rather than a hard-coded skip list.
+    """
+    if name == "uncoded":
+        return get_scheme("uncoded", k=K)
+    try:
+        return get_scheme(name, k=K, s=S, e=E_BYZ,
+                          **_BYZ_KWARGS.get(name, {}))
+    except ValueError:
+        return None
+
+
+def run(emit=None, schemes=None):
     from benchmarks import common
-    from repro.core.scheme import get_scheme
+    from repro.core.scheme import get_scheme, list_schemes
     from repro.serving import AdversaryConfig
     from repro.serving.scheduler import poisson_arrivals
 
     if emit is None:
         emit = common.emit
+    registered = list_schemes()
+    names = sorted(registered)
+    if schemes:
+        unknown = sorted(set(schemes) - set(names))
+        if unknown:
+            raise ValueError(f"unknown scheme(s) {unknown}; registered: "
+                             f"{names}")
+        names = [n for n in names if n in set(schemes)]
+
     n_requests = common.scaled(512, 64)
     _, _, xte, yte = common.dataset()
     n_requests = min(n_requests, len(xte))
@@ -88,31 +141,24 @@ def run(emit=None):
 
     out = {}
     # -- straggler facet (E = 0) ----------------------------------------
-    schemes = [
-        get_scheme("uncoded", k=K),
-        get_scheme("replication", k=K, s=S),
-        get_scheme("parm", k=K, s=S, parity_fn=common.parity_fn(K)),
-        get_scheme("berrut", k=K, s=S),
-        get_scheme("berrut", k=K, s=S, systematic=True),
-    ]
-    for scheme in schemes:
-        _, metrics, served = _serve(scheme, f, payloads, arrivals)
-        name = ("berrut_systematic"
-                if getattr(scheme.config, "systematic", False)
-                else scheme.name)
-        _cell(emit, out, "straggler", name, scheme, metrics, served, clean,
-              labels)
+    for name in names:
+        for variant, scheme in _straggler_variants(name, get_scheme,
+                                                   common):
+            _, metrics, served = _serve(scheme, f, payloads, arrivals)
+            _cell(emit, out, "straggler", variant, scheme, metrics, served,
+                  clean, labels)
 
     # -- Byzantine facet (E = 1, persistent adversary) ------------------
-    for scheme in (get_scheme("berrut", k=K, s=S, e=E_BYZ, c_vote=10),
-                   get_scheme("replication", k=K, s=S, e=E_BYZ),
-                   get_scheme("uncoded", k=K)):
+    for name in names:
+        scheme = _byzantine_variant(name, get_scheme)
+        if scheme is None:
+            continue
         adv = AdversaryConfig(kind="persistent", sigma=SIGMA, seed=3,
                               num_adversaries=E_BYZ)
         _, metrics, served = _serve(scheme, f, payloads, arrivals,
                                     adversary=adv)
-        _cell(emit, out, "byzantine", scheme.name, scheme, metrics, served,
-              labels=labels, clean=clean)
+        _cell(emit, out, "byzantine", name, scheme, metrics, served,
+              clean=clean, labels=labels)
     return out
 
 
@@ -120,11 +166,26 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-shapes mode (REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("--schemes", default=None, metavar="A,B,...",
+                    help="comma-separated registry names to run "
+                         "(default: every registered scheme)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write cells as JSON under a 'schemes' section "
+                         "(the regression-gate format)")
     args = ap.parse_args(argv)
     if args.smoke:
         # must precede the benchmarks.common import inside run()
         os.environ["REPRO_BENCH_SMOKE"] = "1"
-    run()
+    schemes = (None if args.schemes is None
+               else [s.strip() for s in args.schemes.split(",") if s.strip()])
+    out = run(schemes=schemes)
+    if args.json:
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump({"smoke": bool(args.smoke), "schemes": out}, fh,
+                      indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,79 @@
+"""NeRCC and Coded-InvNet through the scheme registry, in ~70 lines.
+
+Two coded-inference schemes beyond Berrut, both reached the same way —
+``get_scheme(name, ...)`` — and both pluggable into the full serving
+stack (scheduler, adversary, quarantine, adaptive controller) with zero
+scheduler changes:
+
+  * nercc  — nested-regression coding (arXiv 2402.04377): ridge
+    Chebyshev encoder/decoder over Berrut's worker geometry, plus a
+    studentised-residual vote locator for Byzantine workers;
+  * invnet — Coded-InvNet (arXiv 2106.06445): parity streams run the
+    hosted model on flow-mixed queries; a single failed stream
+    reconstructs EXACTLY (not approximately) from the parity.
+
+  PYTHONPATH=src python examples/nercc_invnet.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_scheme, list_schemes
+from repro.serving import ControllerConfig, RedundancyController
+
+# --- the hosted model f: any batched JAX function (model-agnostic!) ----
+rng = np.random.RandomState(0)
+w1 = jnp.asarray(rng.randn(16, 64) / 4.0, jnp.float32)
+w2 = jnp.asarray(rng.randn(64, 10) / 8.0, jnp.float32)
+
+
+def f(x):
+    return jax.nn.tanh(x @ w1) @ w2
+
+
+print("registered schemes:")
+for name, desc in sorted(list_schemes().items()):
+    print(f"  {name:12s} {desc}")
+
+queries = jnp.asarray(rng.randn(2, 4, 16), jnp.float32)  # (G, K, D)
+clean = f(queries.reshape(-1, 16)).reshape(2, 4, -1)
+
+# --- NeRCC: straggler decode + Byzantine location ----------------------
+sch = get_scheme("nercc", k=4, s=1, e=1, c_vote=10)
+print(f"\nnercc: K=4 -> {sch.num_workers} workers, decode at the "
+      f"fastest {sch.decode_quorum} (locator quorum K+2E)")
+outs = np.array(f(np.asarray(sch.encode(queries)).reshape(-1, 16))
+                ).reshape(2, sch.num_workers, -1)
+outs[:, 2] += rng.randn(2, outs.shape[-1]).astype(np.float32) * 50.0
+avail = np.ones((2, sch.num_workers), np.float32)
+avail[:, 7] = 0.0                                  # and one straggler
+decoded, located, _, _ = sch.locate(jnp.asarray(outs), jnp.asarray(avail))
+err = float(jnp.max(jnp.abs(decoded.reshape(2, 4, -1) - clean)))
+print(f"nercc: located Byzantine worker(s) "
+      f"{[i for i in range(sch.num_workers) if located[0][i]]} "
+      f"(truth: [2]); decode err vs clean {err:.3f}")
+
+# --- NeRCC behind the adaptive redundancy controller -------------------
+ctl = RedundancyController(sch, ControllerConfig(
+    window_rounds=4, s_min=0, s_max=2, e_min=0, e_max=1))
+print(f"nercc + controller: pool sized for {ctl.pool.num_workers} "
+      f"workers; with_redundancy re-plans carry the regression knobs")
+
+# --- Coded-InvNet: exact single-failure reconstruction -----------------
+# trained-free fallback: parity streams are plain input mixtures, so
+# reconstruction is EXACT whenever f commutes with the mixture (linear
+# heads); flow="auto" lifts the mixture into a coupling-flow latent
+# space for the general case (pair with a fine-tuned parity_fn).
+w_lin = jnp.asarray(rng.randn(16, 10) / 4.0, jnp.float32)
+g = jax.jit(lambda x: x @ w_lin)
+sch = get_scheme("invnet", k=4, s=1, flow=None)
+streams = sch.forward(g, sch.encode(queries))      # parity runs g too
+avail = np.ones((2, sch.num_workers), np.float32)
+avail[0, 1] = 0.0                                  # lose one data stream
+recon = sch.decode(streams, jnp.asarray(avail)).reshape(2, 4, -1)
+clean_lin = g(queries.reshape(-1, 16)).reshape(2, 4, -1)
+err = float(jnp.max(jnp.abs(recon - clean_lin)))
+print(f"\ninvnet: lost stream 1 of group 0 -> reconstruction err "
+      f"{err:.2e} (exact to fp32 round-off — no retraining, no "
+      f"approximation)")

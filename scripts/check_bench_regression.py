@@ -31,6 +31,12 @@ import sys
 # flaky without guarding anything users run.
 _GATED = ("fused_us", "encode_us", "round_us", "p99_ms", "gathered_bytes")
 
+# Quality fields gated as FLOORS per cell (higher is better): the
+# scheme-faceoff agreement runs on an exact-seeded event clock, so it
+# only moves when the coding math does — a drop past --max-drop is a
+# decode/locator regression, never box noise.
+_GATED_FLOOR = ("agreement",)
+
 
 def _cells(doc):
     # fig_mesh_serving --json: per-gather-mode cells whose
@@ -47,6 +53,10 @@ def _cells(doc):
     # fig_adaptive_redundancy --json: one cell per serving policy
     for key, cell in (doc.get("policies") or {}).items():
         yield f"policies.{key}", cell
+    # fig_scheme_faceoff --json: one cell per (facet, scheme); gated on
+    # the agreement FLOOR rather than a latency ratio
+    for key, cell in (doc.get("schemes") or {}).items():
+        yield f"schemes.{key}", cell
 
 
 def main(argv=None) -> int:
@@ -55,6 +65,9 @@ def main(argv=None) -> int:
     ap.add_argument("baseline", help="checked-in baseline JSON")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when current > ratio * baseline")
+    ap.add_argument("--max-drop", type=float, default=0.03,
+                    help="fail when a floor metric (agreement) falls "
+                         "more than this below baseline")
     args = ap.parse_args(argv)
 
     with open(args.current) as fh:
@@ -84,15 +97,28 @@ def main(argv=None) -> int:
                 print("REGRESSION " + line)
             else:
                 print("ok         " + line)
+        for field in _GATED_FLOOR:
+            if field not in bcell or field not in ccell:
+                continue
+            compared += 1
+            drop = bcell[field] - ccell[field]
+            line = (f"{key}.{field}: {ccell[field]:.4f} vs baseline "
+                    f"{bcell[field]:.4f} (drop {drop:+.4f})")
+            if drop > args.max_drop:
+                failures.append(line)
+                print("REGRESSION " + line)
+            else:
+                print("ok         " + line)
     if not compared:
         print("error: no comparable metrics between current and baseline",
               file=sys.stderr)
         return 2
     if failures:
-        print(f"\n{len(failures)} metric(s) regressed more than "
-              f"{args.max_ratio}x", file=sys.stderr)
+        print(f"\n{len(failures)} metric(s) regressed (>{args.max_ratio}x "
+              f"ratio or >{args.max_drop} floor drop)", file=sys.stderr)
         return 1
-    print(f"\nall {compared} metrics within {args.max_ratio}x of baseline")
+    print(f"\nall {compared} metrics within {args.max_ratio}x / "
+          f"-{args.max_drop} of baseline")
     return 0
 
 

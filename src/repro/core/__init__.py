@@ -16,7 +16,10 @@ from repro.core.parity import parm_inference
 from repro.core.scheme import (BerrutScheme, DispatchPlan, ParMScheme,
                                RedundancyScheme, ReplicationScheme,
                                UncodedScheme, as_scheme, get_scheme,
-                               register_scheme, scheme_names)
+                               list_schemes, register_scheme, scheme_names)
+# imported AFTER scheme: registration side effects need the registry
+from repro.core.nercc import NeRCCConfig, NeRCCScheme
+from repro.core.invnet import CouplingFlow, InvNetConfig, InvNetScheme
 
 __all__ = [
     "CodingConfig", "chebyshev_first_kind", "chebyshev_second_kind",
@@ -28,5 +31,7 @@ __all__ = [
     "replicated_inference", "replication_workers", "parm_inference",
     "RedundancyScheme", "DispatchPlan", "BerrutScheme", "ParMScheme",
     "ReplicationScheme", "UncodedScheme", "as_scheme", "get_scheme",
-    "register_scheme", "scheme_names",
+    "list_schemes", "register_scheme", "scheme_names",
+    "NeRCCConfig", "NeRCCScheme",
+    "CouplingFlow", "InvNetConfig", "InvNetScheme",
 ]

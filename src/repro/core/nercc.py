@@ -1,0 +1,363 @@
+"""NeRCC: nested-regression coded inference (arXiv 2402.04377).
+
+NeRCC frames straggler-resilient coded computing as two nested
+regression layers instead of ApproxIFER's rational interpolation:
+
+  * **layer 1 (encoder)**: fit a smoothing regression u(z) through the
+    K real queries placed at the Chebyshev first-kind anchors and
+    evaluate it at the W worker nodes — worker i computes f(u(beta_i));
+  * **layer 2 (decoder)**: fit a smoothing regression through the
+    *available* worker outputs at their nodes and evaluate it back at
+    the anchors to recover the K predictions.
+
+The paper's claim is that regression (degree + ridge strength chosen
+below interpolation) beats Berrut's exact-interpolation decode at equal
+redundancy, because the decoder averages worker noise instead of
+passing it through.  Both layers are *linear* in the data — exactly
+like `core/berrut.py` they reduce to a static encode matrix and a
+mask-dependent decode matrix — so the scheme drops behind the
+``RedundancyScheme`` protocol with zero scheduler changes.
+
+Adaptation (DESIGN.md §14): the paper regularises with smoothing
+splines; we use ridge-regularised **Chebyshev** regression — the same
+estimator family (roughness penalty on high-order terms via the
+``m^4`` diagonal, the Chebyshev analogue of a second-derivative
+penalty) in the basis the rest of this repo is built on, and the one
+that is numerically benign in fp32 (see ``core/error_locator.py``).
+Degrees and ridge strengths are exposed in the hashable
+``NeRCCConfig`` so jitted paths treat them as static and the adaptive
+controller can re-plan (S, E) around them.
+
+Byzantine mode (E > 0) mirrors Berrut's geometry — 2(K+E)+S workers,
+K+2E decode quorum — with a studentised-residual locator: a worker
+whose leave-in regression residual is an outlier across a majority of
+vote coordinates (vote-gated, like Algorithm 2) is excluded and the
+decoder refits without it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.berrut import chebyshev_first_kind, chebyshev_second_kind
+from repro.core.error_locator import chebyshev_design, gather_vote_values
+from repro.core.scheme import RedundancyScheme, register_scheme
+
+# Keeps every decoder Gram matrix strictly positive definite, so any
+# availability mask — including speculative decodes below quorum —
+# yields a finite solve.
+_GRAM_EPS = 1e-8
+# Absolute vote-threshold floor relative to the signal RMS: on clean
+# rounds where the regression is near-exact (linear hosted models) the
+# median residual is numerical noise, and tau * median alone would
+# flag honest workers on noise-level fluctuations.
+_VOTE_FLOOR = 1e-3
+
+
+def _cheb_design_np(x: np.ndarray, degree: int) -> np.ndarray:
+    """float64 numpy twin of ``error_locator.chebyshev_design`` for the
+    static (compile-time constant) encoder matrix."""
+    cols = [np.ones_like(x)]
+    if degree >= 1:
+        cols.append(x)
+    for _ in range(2, degree + 1):
+        cols.append(2.0 * x * cols[-1] - cols[-2])
+    return np.stack(cols, axis=-1)
+
+
+def _roughness_np(degree: int) -> np.ndarray:
+    """Diagonal roughness penalty diag(m^4), m = Chebyshev order.
+
+    T_m'' scales like m^2 * (lower-order terms), so penalising the
+    coefficient of T_m by m^4 in the quadratic form is the Chebyshev
+    counterpart of the smoothing-spline integral of u''(z)^2.  Order 0
+    (constants) is never penalised, so both layers reproduce constant
+    functions exactly at any ridge strength.
+    """
+    m = np.arange(degree + 1, dtype=np.float64)
+    return np.diag(m ** 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class NeRCCConfig:
+    """NeRCC redundancy + regression parameters (hashable, static).
+
+    K/S/E and the worker-pool geometry mirror ``CodingConfig`` exactly
+    — N+1 = K+S workers when E = 0, 2(K+E)+S when E > 0, with the same
+    K+2E locator decode quorum — so ``apply_pool_state`` and the
+    scheduler's quorum logic hold unchanged.  ``degree_enc`` /
+    ``degree_dec`` (-1 = K-1, the interpolating default) and
+    ``lambda_enc`` / ``lambda_dec`` are the nested-regression knobs the
+    paper tunes per operating point.
+    """
+
+    k: int
+    s: int = 1
+    e: int = 0
+    degree_enc: int = -1        # -1 -> K-1 (encoder interpolates)
+    degree_dec: int = -1        # -1 -> K-1
+    lambda_enc: float = 0.0
+    lambda_dec: float = 1e-6
+    c_vote: int = 64            # locator vote coordinates (DESIGN.md §3)
+    vote_tau: float = 6.0       # residual-outlier multiple for one vote
+
+    def __post_init__(self):
+        if self.k < 1 or self.s < 0 or self.e < 0:
+            raise ValueError(f"invalid NeRCC config {self}")
+        if self.degree_enc < -1 or self.degree_dec < -1:
+            raise ValueError(f"regression degrees must be >= 0 (or -1 for "
+                             f"K-1), got {self}")
+        if self.lambda_enc < 0.0 or self.lambda_dec < 0.0:
+            raise ValueError(f"ridge strengths must be >= 0, got {self}")
+
+    # -- worker-pool geometry (identical to CodingConfig) ----------------
+
+    @property
+    def n(self) -> int:
+        if self.e == 0:
+            return self.k + self.s - 1
+        return 2 * (self.k + self.e) + self.s - 1
+
+    @property
+    def num_workers(self) -> int:
+        return self.n + 1
+
+    @property
+    def wait_for(self) -> int:
+        if self.e == 0:
+            return self.k
+        return 2 * (self.k + self.e)
+
+    @property
+    def decode_quorum(self) -> int:
+        if self.e == 0:
+            return self.k
+        return min(self.k + 2 * self.e, self.num_workers)
+
+    @property
+    def overhead(self) -> float:
+        return self.num_workers / self.k
+
+    @property
+    def alphas(self) -> np.ndarray:
+        return chebyshev_first_kind(self.k)
+
+    @property
+    def betas(self) -> np.ndarray:
+        return chebyshev_second_kind(self.n)
+
+    # -- regression degrees ----------------------------------------------
+
+    @property
+    def d_enc(self) -> int:
+        return self.k - 1 if self.degree_enc < 0 else self.degree_enc
+
+    @property
+    def d_dec(self) -> int:
+        return self.k - 1 if self.degree_dec < 0 else self.degree_dec
+
+
+@functools.lru_cache(maxsize=None)
+def _encode_matrix_np(k: int, s: int, e: int, degree: int,
+                      lam: float) -> np.ndarray:
+    """Static (W, K) layer-1 matrix: ridge Chebyshev regression fit at
+    the anchors, evaluated at the worker nodes.  Pure numpy float64 so
+    it is a compile-time constant under jit (cf. berrut's encoder)."""
+    cfg = NeRCCConfig(k=k, s=s, e=e, degree_enc=degree, lambda_enc=lam)
+    d = cfg.d_enc
+    pa = _cheb_design_np(np.asarray(cfg.alphas, np.float64), d)
+    pb = _cheb_design_np(np.asarray(cfg.betas, np.float64), d)
+    gram = pa.T @ pa + lam * _roughness_np(d) + 1e-12 * np.eye(d + 1)
+    return (pb @ np.linalg.solve(gram, pa.T)).astype(np.float32)
+
+
+def encode_matrix(cfg: NeRCCConfig) -> jnp.ndarray:
+    return jnp.asarray(_encode_matrix_np(cfg.k, cfg.s, cfg.e,
+                                         cfg.d_enc, cfg.lambda_enc))
+
+
+def decode_matrix(cfg: NeRCCConfig, mask) -> jnp.ndarray:
+    """Runtime (K, W) layer-2 matrix for an availability ``mask``:
+    ridge Chebyshev regression through the surviving worker outputs,
+    evaluated back at the anchors.  The ridge + epsilon terms keep the
+    Gram PD for ANY mask, so decode is total (finite) down to — and
+    below — the quorum."""
+    d = cfg.d_dec
+    phi_b = chebyshev_design(jnp.asarray(cfg.betas, jnp.float32), d)
+    phi_a = chebyshev_design(jnp.asarray(cfg.alphas, jnp.float32), d)
+    m = jnp.asarray(mask, jnp.float32)
+    reg = (cfg.lambda_dec * jnp.asarray(_roughness_np(d), jnp.float32)
+           + _GRAM_EPS * jnp.eye(d + 1, dtype=jnp.float32))
+    gram = phi_b.T @ (m[:, None] * phi_b) + reg
+    return phi_a @ jnp.linalg.solve(gram, phi_b.T * m[None, :])
+
+
+def _group_votes(cfg: NeRCCConfig, vals: jnp.ndarray,
+                 avail2d: jnp.ndarray) -> jnp.ndarray:
+    """(G, W, C) vote values + (G, W) availability -> (G, W) int votes.
+
+    Per (group, coordinate): greedily remove the E most suspicious
+    workers (largest internally-studentised residual), refit on the
+    remainder, and vote for a removed worker only when its EXTERNALLY
+    studentised residual against that honest refit — the out-of-sample
+    miss discounted by its prediction variance sqrt(1 + h~), h~ the
+    refit leverage at the held-out node — is an outlier multiple of the
+    refit's robust (MAD) residual scale.
+
+    The remove-then-refit is the load-bearing step: with only K+2E
+    responses a single sigma-scale corruption drags the joint LS fit so
+    far that EVERY worker's residual inflates, and a one-pass median
+    threshold gates out all votes (fit pollution circularity).  The
+    sqrt(1 + h~) discount is equally load-bearing in the other
+    direction: judged undiscounted, an honest worker at an
+    extrapolating node (large h~ once its neighbours are masked) reads
+    as an outlier on perfectly clean rounds.  Externally-studentised
+    residuals are the textbook statistic that handles both at once.
+    """
+    d = cfg.d_dec
+    phi = chebyshev_design(jnp.asarray(cfg.betas, jnp.float32), d)
+    reg = (cfg.lambda_dec * jnp.asarray(_roughness_np(d), jnp.float32)
+           + _GRAM_EPS * jnp.eye(d + 1, dtype=jnp.float32))
+
+    def fit_residuals(yc, m):
+        gram = phi.T @ (m[:, None] * phi) + reg
+        ginv = jnp.linalg.inv(gram)
+        resid = jnp.abs(yc - phi @ (ginv @ (phi.T @ (m * yc))))
+        lev = jnp.sum((phi @ ginv) * phi, axis=-1)   # phi_i^T G^-1 phi_i
+        return resid, lev
+
+    def per_coord(yc, m0):                     # yc (W,), m0 (W,)
+        m, removed = m0, jnp.zeros_like(m0)
+        for _ in range(cfg.e):
+            resid, lev = fit_residuals(yc, m)
+            stud = resid * m / jnp.sqrt(jnp.clip(1.0 - lev * m, 5e-2,
+                                                 None))
+            sel = jax.nn.one_hot(jnp.argmax(stud), m.shape[0],
+                                 dtype=m.dtype)
+            removed = removed + sel * m
+            m = m * (1.0 - sel)
+        resid, lev = fit_residuals(yc, m)      # the honest refit
+        # robust sigma from the refit inliers (in-sample leverage < 1)
+        inlier = resid / jnp.sqrt(jnp.clip(1.0 - lev * m, 5e-2, None))
+        sigma = 1.4826 * jnp.nanmedian(jnp.where(m > 0, inlier, jnp.nan))
+        # held-out misses, discounted by their prediction variance
+        t_out = resid / jnp.sqrt(1.0 + jnp.clip(lev, 0.0, None))
+        rms = jnp.sqrt(jnp.sum((yc * m0) ** 2)
+                       / jnp.maximum(jnp.sum(m0), 1.0))
+        thr = cfg.vote_tau * sigma + _VOTE_FLOOR * rms + 1e-6
+        return (removed > 0) & (t_out > thr)
+
+    y = jnp.moveaxis(vals, 1, 2)               # (G, C, W)
+    votes = jax.vmap(jax.vmap(per_coord, in_axes=(0, None)),
+                     in_axes=(0, 0))(y, avail2d)
+    return jnp.sum(votes, axis=1).astype(jnp.int32)    # (G, W)
+
+
+@register_scheme("nercc", description="NeRCC nested-regression code "
+                 "(arXiv 2402.04377): ridge Chebyshev regression "
+                 "encode/decode, Berrut-geometry locator quorum")
+def _make_nercc(k: int, s: int = 1, e: int = 0, *, degree_enc: int = -1,
+                degree_dec: int = -1, lambda_enc: float = 0.0,
+                lambda_dec: float = 1e-6, c_vote: int = 64,
+                vote_tau: float = 6.0) -> "NeRCCScheme":
+    return NeRCCScheme(NeRCCConfig(k=k, s=s, e=e, degree_enc=degree_enc,
+                                   degree_dec=degree_dec,
+                                   lambda_enc=lambda_enc,
+                                   lambda_dec=lambda_dec, c_vote=c_vote,
+                                   vote_tau=vote_tau))
+
+
+class NeRCCScheme(RedundancyScheme):
+    """NeRCC behind the ``RedundancyScheme`` protocol.
+
+    With the interpolating defaults (degree K-1, lambda_enc 0) the
+    full-availability round trip is exact for linear hosted models —
+    the composition decode @ encode is the identity up to the decoder's
+    O(lambda_dec) ridge bias — and under stragglers the decoder's
+    least-squares fit over K..W survivors is what the paper claims
+    beats Berrut's interpolation at equal redundancy (measured in
+    ``benchmarks/fig_scheme_faceoff.py``; EXPERIMENTS.md §12).
+    """
+
+    name = "nercc"
+
+    def __init__(self, config: NeRCCConfig):
+        super().__init__(config)
+
+    @property
+    def has_locator(self) -> bool:
+        return self.config.e > 0
+
+    def with_redundancy(self, *, s: Optional[int] = None,
+                        e: Optional[int] = None) -> "NeRCCScheme":
+        s = self.s if s is None else s
+        e = self.e if e is None else e
+        if (s, e) == (self.s, self.e):
+            return self
+        # preserve the regression knobs the registry default would drop
+        return NeRCCScheme(dataclasses.replace(self.config, s=s, e=e))
+
+    def encode(self, grouped: jnp.ndarray) -> jnp.ndarray:
+        w = encode_matrix(self.config).astype(grouped.dtype)
+        moved = jnp.moveaxis(grouped, 1, 0)
+        coded = jnp.tensordot(w, moved, axes=((1,), (0,)))
+        return jnp.moveaxis(coded, 0, 1)
+
+    def _apply_decode(self, outputs: jnp.ndarray,
+                      avail: jnp.ndarray) -> jnp.ndarray:
+        g, w = outputs.shape[:2]
+        y = outputs.astype(jnp.float32).reshape(g, w, -1)
+        avail = jnp.asarray(avail, jnp.float32)
+        if avail.ndim == 1:
+            wd = decode_matrix(self.config, avail)
+            out = jnp.einsum("kw,gwc->gkc", wd, y)
+        else:
+            wd = jax.vmap(lambda m: decode_matrix(self.config, m))(avail)
+            out = jnp.einsum("gkw,gwc->gkc", wd, y)
+        out = out.reshape(g * self.k, *outputs.shape[2:])
+        return out.astype(outputs.dtype)
+
+    def decode(self, outputs: jnp.ndarray, avail: jnp.ndarray, *,
+               locate: Optional[bool] = None) -> jnp.ndarray:
+        if locate is None:
+            locate = self.config.e > 0
+        if locate and self.config.e > 0:
+            return self.locate(outputs, avail)[0]
+        return self._apply_decode(outputs, avail)
+
+    def locate(self, outputs: jnp.ndarray, avail: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Residual-vote locator (vote-gated, cross-group pooled).
+
+        Workers own stream i of EVERY group in a batch (worker-axis
+        convention), so per-(group, coordinate) outlier votes pool
+        across groups; a worker is located only when it wins a majority
+        of all G * C_vote coordinates AND sits in the residual top-E —
+        clean rounds scatter votes and locate nobody.
+        """
+        cfg = self.config
+        if cfg.e == 0:
+            return super().locate(outputs, avail)
+        g, w = outputs.shape[:2]
+        flat = outputs.reshape(g, w, -1)
+        vals = gather_vote_values(flat, cfg.c_vote)
+        avail2d = jnp.broadcast_to(jnp.asarray(avail, jnp.float32), (g, w))
+        votes = np.asarray(_group_votes(cfg, vals, avail2d))
+        pooled = votes.sum(axis=0)                       # (W,)
+        total = g * vals.shape[-1]
+        located1 = np.zeros(w, bool)
+        for i in np.argsort(-pooled, kind="stable")[:cfg.e]:
+            if pooled[i] > total / 2.0:
+                located1[i] = True
+        located = np.broadcast_to(located1, (g, w)).copy()
+        masks = np.asarray(avail2d) * ~located
+        decoded = self._apply_decode(outputs,
+                                     jnp.asarray(masks, jnp.float32))
+        votes2d = np.broadcast_to(pooled.astype(np.int32), (g, w)).copy()
+        return decoded, located, votes2d, masks

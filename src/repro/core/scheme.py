@@ -182,18 +182,38 @@ class RedundancyScheme:
 # ---------------------------------------------------------------- registry
 
 _REGISTRY: Dict[str, Callable[..., RedundancyScheme]] = {}
+_DESCRIPTIONS: Dict[str, str] = {}
 
 
-def register_scheme(name: str):
-    """Class/factory decorator adding a scheme to the string registry."""
+def register_scheme(name: str, description: str = ""):
+    """Class/factory decorator adding a scheme to the string registry.
+
+    ``description`` is a one-line human summary surfaced by
+    ``list_schemes()`` (README table, faceoff benchmark, ``--help``);
+    it defaults to the factory's first docstring line.
+    """
     def deco(factory):
         _REGISTRY[name] = factory
+        _DESCRIPTIONS[name] = (description
+                               or (factory.__doc__ or "").strip().split(
+                                   "\n")[0])
         return factory
     return deco
 
 
 def scheme_names() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def list_schemes() -> Dict[str, str]:
+    """Every registered scheme: sorted ``{name: one-line description}``.
+
+    The discovery surface for scheme-generic tooling — the faceoff
+    benchmark iterates this instead of a hard-coded list, so a newly
+    registered scheme shows up in the comparison (and the README table)
+    without touching the benchmark.
+    """
+    return {name: _DESCRIPTIONS.get(name, "") for name in scheme_names()}
 
 
 def get_scheme(name: str, k: int, *, s: int = 1, e: int = 0,
@@ -226,7 +246,9 @@ def as_scheme(obj) -> RedundancyScheme:
 
 # ---------------------------------------------------------------- berrut
 
-@register_scheme("berrut")
+@register_scheme("berrut", description="ApproxIFER Berrut rational code "
+                 "(paper Eq. 4-11): model-agnostic, vote-gated locator, "
+                 "optional systematic nodes")
 def _make_berrut(k: int, s: int = 1, e: int = 0, *, systematic: bool = False,
                  c_vote: int = 64) -> "BerrutScheme":
     return BerrutScheme(CodingConfig(k=k, s=s, e=e, systematic=systematic,
@@ -302,7 +324,9 @@ class UncodedConfig:
         return self.k
 
 
-@register_scheme("uncoded")
+@register_scheme("uncoded", description="no redundancy: K queries on K "
+                 "workers, waits for all, tolerates nothing (ground-truth "
+                 "baseline)")
 def _make_uncoded(k: int, s: int = 0, e: int = 0) -> "UncodedScheme":
     # S/E are accepted for registry uniformity but an uncoded system
     # tolerates neither — it waits for every worker and trusts them all.
@@ -372,7 +396,9 @@ class ReplicationConfig:
         return self.wait_for
 
 
-@register_scheme("replication")
+@register_scheme("replication", description="(S+1)x / (2E+1)x replication "
+                 "(paper §1/§5): exact but at the overhead coding exists "
+                 "to avoid")
 def _make_replication(k: int, s: int = 1, e: int = 0) -> "ReplicationScheme":
     return ReplicationScheme(ReplicationConfig(k=k, s=s, e=e))
 
@@ -440,7 +466,9 @@ class ParMConfig:
         return self.k
 
 
-@register_scheme("parm")
+@register_scheme("parm", description="ParM learned-parity code (Kosaian "
+                 "et al., SOSP'19): K data + 1 parity stream, exactly one "
+                 "straggler, parity model per hosted model")
 def _make_parm(k: int, s: int = 1, e: int = 0, *,
                parity_fn: Optional[Callable] = None) -> "ParMScheme":
     return ParMScheme(ParMConfig(k=k, s=s, e=e), parity_fn=parity_fn)

@@ -13,11 +13,13 @@ them, reputation accumulates, and (with ``--quarantine``) repeat
 offenders stop being dispatched to until their probation expires.
 
 Any registered redundancy scheme serves through the same event loop
-(``--scheme berrut|parm|replication|uncoded``, DESIGN.md §9): "berrut"
-(default) drives the jitted autoregressive coded-LLM path; the other
-schemes serve single-shot next-token prediction over the model's
-embedding space via ``EngineExecutor`` — ParM parity queries are sums of
-embeddings, replication copies them, and the decode recovers the
+(``--scheme berrut|nercc|invnet|parm|replication|uncoded``, DESIGN.md
+§9/§14): "berrut" (default) drives the jitted autoregressive coded-LLM
+path; the other schemes serve single-shot next-token prediction over
+the model's embedding space via ``EngineExecutor`` — ParM parity
+queries are sums of embeddings, replication copies them, NeRCC fits a
+nested Chebyshev regression over the streams, Coded-InvNet mixes
+flow-lifted queries into parity streams, and the decode recovers the
 straggled slots per scheme.
 
 With ``--continuous`` the berrut LLM path runs continuous batching over
@@ -103,6 +105,17 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         print("parm: parity stream runs the hosted model on summed "
               "embeddings (no per-model distilled parity network here — "
               "exactly the retraining cost ApproxIFER removes)")
+    if scheme == "nercc":
+        locator = (f"; E={e} runs the studentised-residual vote locator"
+                   if e else "")
+        print("nercc: nested-regression coding (arXiv 2402.04377) — "
+              "ridge Chebyshev encoder/decoder over Berrut's worker "
+              f"geometry{locator}")
+    if scheme == "invnet":
+        print("invnet: Coded-InvNet (arXiv 2106.06445) — parity streams "
+              "run the hosted model on flow-mixed queries; a single "
+              "failed stream reconstructs exactly (trained-free "
+              "fallback when no flow is fit)")
 
     if continuous and scheme != "berrut":
         raise ValueError("--continuous drives the jitted berrut slot-pool "

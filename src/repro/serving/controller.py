@@ -28,9 +28,13 @@ the locator needs (the quarantine→quorum hole, fixed in the scheduler,
 enforced here by construction).
 
 NeRCC (arXiv 2402.04377) tunes its redundancy/approximation trade-off
-per operating point, and block-design gradient coding (arXiv 1904.13373)
-sizes redundancy to adversarial rather than random straggler rates —
-both are the offline versions of what this controller does online.
+per operating point — since ``repro.core.nercc`` landed it is no longer
+just prior art: ``get_scheme("nercc", ...)`` plugs straight into this
+controller, whose ``with_redundancy`` re-plans carry the scheme's
+regression knobs across operating points.  Block-design gradient coding
+(arXiv 1904.13373) sizes redundancy to adversarial rather than random
+straggler rates — the offline version of what this controller does
+online.
 
 Decisions are deterministic in the observation stream: the same seed +
 arrival trace reproduces the identical decision log

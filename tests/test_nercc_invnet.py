@@ -1,0 +1,310 @@
+"""Scheme-specific tests for NeRCC and Coded-InvNet (DESIGN.md §14).
+
+The registry-wide protocol properties (quorum-decode finiteness,
+full-availability == uncoded, end-to-end serving) already cover both
+schemes through ``tests/test_scheme.py``; this file tests what is
+specific to each:
+
+  * NeRCC beats Berrut agreement at equal (K, S, E) on a fixed smoke
+    cell (the paper's headline claim, arXiv 2402.04377);
+  * the NeRCC residual-vote locator finds a lying worker and stays
+    silent on clean rounds (false-positive discipline);
+  * the InvNet coupling flow inverts exactly and single-/multi-failure
+    reconstruction is exact in the regimes where exactness is possible;
+  * ``with_redundancy`` re-planning under ``RedundancyController``
+    preserves each scheme's non-registry knobs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CouplingFlow
+from repro.core.invnet import InvNetScheme, _mixup_coeffs_np
+from repro.core.nercc import NeRCCConfig, NeRCCScheme
+from repro.core.scheme import get_scheme
+from repro.serving.controller import ControllerConfig, RedundancyController
+
+K = 4
+
+
+def _mlp(seed=0, d_in=16, d_h=64, n_cls=10):
+    rng = np.random.RandomState(seed)
+    w1 = jnp.asarray(rng.randn(d_in, d_h) / 4.0, jnp.float32)
+    w2 = jnp.asarray(rng.randn(d_h, n_cls) / 8.0, jnp.float32)
+    return jax.jit(lambda x: jax.nn.tanh(x @ w1) @ w2)
+
+
+def _linear(seed=0, d_in=16, n_cls=10):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(d_in, n_cls) / np.sqrt(d_in), jnp.float32)
+    return jax.jit(lambda x: x @ w)
+
+
+def _forward(scheme, f, queries):
+    grouped = queries.reshape(-1, scheme.k, *queries.shape[1:])
+    return scheme.forward(f, scheme.encode(grouped))
+
+
+def _drop_mask(scheme, *drops):
+    m = np.ones(scheme.num_workers, np.float32)
+    for d in drops:
+        m[d] = 0.0
+    return jnp.asarray(m)
+
+
+class TestNeRCC:
+    def test_registry_and_geometry(self):
+        sch = get_scheme("nercc", k=K, s=1)
+        assert isinstance(sch, NeRCCScheme)
+        assert (sch.num_workers, sch.wait_for, sch.decode_quorum) == (5, 4, 4)
+        assert not sch.has_locator
+        byz = get_scheme("nercc", k=K, s=1, e=1)
+        # Berrut's exact Byzantine geometry: 2(K+E)+S workers, offline
+        # wait 2(K+E), K+2E locator quorum — apply_pool_state unchanged
+        assert (byz.num_workers, byz.wait_for, byz.decode_quorum) == (11, 10, 6)
+        assert byz.has_locator
+
+    def test_config_hashable_and_validated(self):
+        assert hash(NeRCCConfig(k=4, s=2, e=1)) is not None
+        with pytest.raises(ValueError, match="degrees"):
+            NeRCCConfig(k=4, degree_dec=-2)
+        with pytest.raises(ValueError, match="ridge"):
+            NeRCCConfig(k=4, lambda_dec=-1.0)
+
+    def test_beats_berrut_on_smoke_straggler_cell(self):
+        """The paper's claim at equal redundancy: on the fixed smoke
+        cell (K=4, S=1, E=0, every single-drop pattern) NeRCC's decode
+        agreement with the clean model is at least Berrut's for every
+        drop position, and strictly better on average."""
+        f = _mlp()
+        q = jnp.asarray(np.random.RandomState(3).randn(64 * K, 16),
+                        jnp.float32)
+        clean_top = np.argmax(np.asarray(f(q)), -1)
+        means = {}
+        for name in ("berrut", "nercc"):
+            sch = get_scheme(name, k=K, s=1)
+            outs = _forward(sch, f, q)
+            per_drop = []
+            for drop in range(sch.num_workers):
+                out = np.asarray(sch.decode(outs, _drop_mask(sch, drop)))
+                per_drop.append(np.mean(np.argmax(out, -1) == clean_top))
+            means[name] = (np.asarray(per_drop), float(np.mean(per_drop)))
+        nercc, berrut = means["nercc"], means["berrut"]
+        assert (nercc[0] >= berrut[0] - 1e-9).all(), (nercc[0], berrut[0])
+        assert nercc[1] > berrut[1]
+
+    def test_locator_finds_byzantine_worker(self):
+        f = _mlp()
+        sch = get_scheme("nercc", k=K, s=1, e=1, c_vote=10)
+        q = jnp.asarray(np.random.RandomState(5).randn(2 * K, 16),
+                        jnp.float32)
+        ref = np.asarray(sch.decode(_forward(sch, f, q),
+                                    _drop_mask(sch, 3), locate=False))
+        outs = np.array(_forward(sch, f, q))
+        outs[:, 3] += 50.0                       # worker 3 lies, loudly
+        mask = jnp.ones(sch.num_workers, jnp.float32)
+        decoded, located, votes, masks = sch.locate(jnp.asarray(outs), mask)
+        assert located[:, 3].all() and located.sum() == located.shape[0]
+        assert (masks[:, 3] == 0).all()
+        # excluding the liar recovers the honest-survivor decode
+        np.testing.assert_allclose(np.asarray(decoded), ref, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_locator_silent_on_clean_round(self):
+        f = _mlp()
+        sch = get_scheme("nercc", k=K, s=1, e=1, c_vote=10)
+        q = jnp.asarray(np.random.RandomState(6).randn(4 * K, 16),
+                        jnp.float32)
+        outs = _forward(sch, f, q)
+        mask = jnp.ones(sch.num_workers, jnp.float32)
+        decoded, located, votes, masks = sch.locate(outs, mask)
+        assert not located.any()
+        np.testing.assert_array_equal(masks, np.ones_like(masks))
+        # decode(locate=None) with e>0 routes through the locator
+        np.testing.assert_array_equal(np.asarray(sch.decode(outs, mask)),
+                                      np.asarray(decoded))
+
+    def test_with_redundancy_preserves_regression_knobs(self):
+        sch = get_scheme("nercc", k=K, s=1, lambda_dec=1e-4, degree_dec=2,
+                         c_vote=12)
+        re = sch.with_redundancy(s=2, e=1)
+        assert isinstance(re, NeRCCScheme)
+        assert (re.s, re.e) == (2, 1)
+        assert re.config.lambda_dec == 1e-4
+        assert re.config.degree_dec == 2
+        assert re.config.c_vote == 12
+        assert re.with_redundancy(s=2, e=1) is re
+
+    def test_controller_retunes_nercc(self):
+        """The PR 6 controller re-plans NeRCC across its full (S, E)
+        range — both corners materialize at construction and a
+        straggler-heavy window grows S through ``with_redundancy``."""
+        ctl = RedundancyController(
+            get_scheme("nercc", k=K, s=1, lambda_dec=1e-4),
+            ControllerConfig(window_rounds=4, s_min=0, s_max=3,
+                             e_min=0, e_max=2, straggle_ms=10.0,
+                             grow_s_above=0.2))
+        w0 = ctl.scheme.num_workers
+        for r in range(8):
+            times = np.full(ctl.scheme.num_workers, 1.0)
+            times[: 2 + ctl.scheme.num_workers // 2] = 100.0  # stragglers
+            ctl.observe_round(float(r), times, trigger_ms=100.0)
+        assert ctl.scheme.num_workers > w0
+        assert isinstance(ctl.scheme, NeRCCScheme)
+        assert ctl.scheme.config.lambda_dec == 1e-4
+        assert ctl.wait_for == ctl.scheme.decode_quorum
+
+
+class TestCouplingFlow:
+    def test_exact_inverse(self):
+        fl = CouplingFlow(16, depth=3, hidden=8, seed=1)
+        x = jnp.asarray(np.random.RandomState(2).randn(5, 16), jnp.float32)
+        back = np.asarray(fl.inverse(fl.forward(x)))
+        np.testing.assert_allclose(back, np.asarray(x), rtol=1e-5,
+                                   atol=1e-5)
+        # and the flow is genuinely non-trivial
+        assert np.abs(np.asarray(fl.forward(x)) - np.asarray(x)).max() > 0.01
+
+    def test_deterministic_in_seed(self):
+        a, b = (CouplingFlow(8, seed=7) for _ in range(2))
+        x = jnp.asarray(np.random.RandomState(0).randn(3, 8), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(a.forward(x)),
+                                      np.asarray(b.forward(x)))
+
+    def test_rejects_degenerate_dims(self):
+        with pytest.raises(ValueError, match="dim >= 2"):
+            CouplingFlow(1)
+        with pytest.raises(ValueError, match="depth"):
+            CouplingFlow(4, depth=0)
+
+
+class TestInvNet:
+    def test_registry_and_geometry(self):
+        sch = get_scheme("invnet", k=K, s=2)
+        assert isinstance(sch, InvNetScheme)
+        assert (sch.num_workers, sch.wait_for, sch.decode_quorum) == (6, 4, 4)
+        assert not sch.has_locator
+
+    def test_rejects_byzantine_and_parityless(self):
+        with pytest.raises(ValueError, match="Byzantine"):
+            get_scheme("invnet", k=K, e=1)
+        with pytest.raises(ValueError, match="parity"):
+            get_scheme("invnet", k=K, s=0)
+
+    def test_mixup_coefficients_are_mds(self):
+        """Row-normalised totally positive Vandermonde: every square
+        submatrix nonsingular, so any r <= S missing data streams are
+        recoverable from any r parity rows; rows sum to 1 (mixtures)."""
+        import itertools
+        for k, s in ((4, 2), (5, 3)):
+            c = _mixup_coeffs_np(k, s).astype(np.float64)
+            np.testing.assert_allclose(c.sum(1), 1.0, rtol=1e-6)
+            for r in range(1, s + 1):
+                for rows in itertools.combinations(range(s), r):
+                    for cols in itertools.combinations(range(k), r):
+                        sub = c[np.ix_(rows, cols)]
+                        assert abs(np.linalg.det(sub)) > 1e-9, (rows, cols)
+
+    @pytest.mark.parametrize("flow", [None, "auto"])
+    def test_single_failure_roundtrip(self, flow):
+        """Exact reconstruction of any single failed stream for a
+        linear model.  In fallback mode (flow=None) the parity stream
+        is a plain input mixture, so the hosted model itself closes the
+        loop; with a coupling flow the nonlinear latent map makes the
+        parity stream approximate for the same model, so only the
+        fallback is held to exactness."""
+        f = _linear()
+        sch = get_scheme("invnet", k=K, s=1, flow=flow)
+        q = jnp.asarray(np.random.RandomState(4).randn(2 * K, 16),
+                        jnp.float32)
+        ref = np.asarray(f(q))
+        outs = _forward(sch, f, q)
+        for drop in range(sch.num_workers):
+            out = np.asarray(sch.decode(outs, _drop_mask(sch, drop)))
+            assert np.isfinite(out).all()
+            if flow is None:
+                np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4,
+                                           err_msg=f"drop={drop}")
+
+    def test_multi_failure_roundtrip_fallback(self):
+        """S=2 parity streams recover ANY two failed data streams
+        exactly (linear model, fallback mode) — the MDS property live."""
+        import itertools
+        f = _linear()
+        sch = get_scheme("invnet", k=K, s=2, flow=None)
+        q = jnp.asarray(np.random.RandomState(8).randn(2 * K, 16),
+                        jnp.float32)
+        ref = np.asarray(f(q))
+        outs = _forward(sch, f, q)
+        for drops in itertools.combinations(range(K), 2):
+            out = np.asarray(sch.decode(outs, _drop_mask(sch, *drops)))
+            np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3,
+                                       err_msg=f"drops={drops}")
+
+    def test_flow_parity_stream_differs_from_fallback(self):
+        """The auto-built coupling flow genuinely changes the parity
+        inputs (nonlinear latent mixture) while full-availability decode
+        stays an exact pass-through."""
+        f = _mlp()
+        q = jnp.asarray(np.random.RandomState(9).randn(2 * K, 16),
+                        jnp.float32)
+        grouped = q.reshape(-1, K, 16)
+        with_flow = get_scheme("invnet", k=K, s=1)
+        fallback = get_scheme("invnet", k=K, s=1, flow=None)
+        pf = np.asarray(with_flow.encode(grouped))[:, K:]
+        pn = np.asarray(fallback.encode(grouped))[:, K:]
+        assert np.abs(pf - pn).max() > 1e-3
+        full = jnp.ones(with_flow.num_workers, jnp.float32)
+        out = np.asarray(with_flow.decode(_forward(with_flow, f, q), full))
+        np.testing.assert_allclose(out, np.asarray(f(q)), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_parity_fn_runs_on_parity_streams(self):
+        calls = []
+
+        def parity_fn(x):
+            calls.append(np.asarray(x).shape)
+            return jnp.zeros((x.shape[0], 10), jnp.float32)
+
+        f = _mlp()
+        sch = get_scheme("invnet", k=K, s=2, parity_fn=parity_fn)
+        q = jnp.asarray(np.random.RandomState(1).randn(2 * K, 16),
+                        jnp.float32)
+        outs = np.asarray(_forward(sch, f, q))
+        assert calls == [(2 * 2, 16)]            # G*S parity inputs
+        assert (outs[:, K:] == 0).all()
+        assert np.abs(outs[:, :K]).max() > 0
+
+    def test_with_redundancy_preserves_flow_and_parity_fn(self):
+        flow = CouplingFlow(16, seed=3)
+        parity_fn = _mlp(seed=11)
+        sch = get_scheme("invnet", k=K, s=1, flow=flow, parity_fn=parity_fn)
+        re = sch.with_redundancy(s=2)
+        assert isinstance(re, InvNetScheme)
+        assert re.flow is flow
+        assert re.parity_fn is parity_fn
+        assert re.num_workers == K + 2
+        with pytest.raises(ValueError, match="Byzantine"):
+            sch.with_redundancy(e=1)
+
+    def test_controller_retunes_invnet_within_e0(self):
+        """The controller re-plans S for InvNet when bounded to its
+        e = 0 operating range; an e_max > 0 range fails loudly at
+        construction (the unreachable-corner contract, like ParM)."""
+        cfg = ControllerConfig(window_rounds=4, s_min=1, s_max=3,
+                               e_min=0, e_max=0, straggle_ms=10.0,
+                               grow_s_above=0.2)
+        ctl = RedundancyController(get_scheme("invnet", k=K, s=1), cfg)
+        w0 = ctl.scheme.num_workers
+        for r in range(8):
+            times = np.full(ctl.scheme.num_workers, 100.0)  # all straggle
+            ctl.observe_round(float(r), times, trigger_ms=100.0)
+        assert ctl.scheme.num_workers > w0
+        assert isinstance(ctl.scheme, InvNetScheme)
+        assert ctl.wait_for == K                  # quorum never moves
+        with pytest.raises(ValueError, match="Byzantine"):
+            RedundancyController(
+                get_scheme("invnet", k=K, s=1),
+                ControllerConfig(s_min=1, s_max=3, e_min=0, e_max=1))

@@ -26,6 +26,16 @@ decision count.  The claim under test: adaptive matches static_max's
 corrupted-decode rate at near static_lean's mean worker cost, with
 equal-or-better p99 than static_lean (whose quorum is cheaper but whose
 attack rounds corrupt).
+
+``--llm`` adds the jitted-LLM facet (DESIGN.md §15): the same three
+policies over the continuous coded-KV slot pool on a reduced
+qwen3-0.6b, adaptive via the masked max-width program (the executor is
+constructed at ``controller.max_scheme``; retunes mask coded streams
+in-program, never retrace).  Agreement is per-token against the
+uncoded greedy reference; ``mean_workers`` is the mean per-round
+dispatch width (``round_widths``) — the claim: ``llm_adaptive`` holds
+``llm_static_max``'s agreement within the gate's floor at a lower mean
+dispatch width.
 """
 
 from __future__ import annotations
@@ -43,6 +53,14 @@ import numpy as np
 K, SIGMA = 4, 80.0
 LEAN_S, LEAN_E = 1, 1
 MAX_S, MAX_E = 2, 2
+
+# --llm facet: K=2 keeps the reduced-model pool small; the lean point
+# (S=0, E=1) spans 6 coded streams, the max point (S=2, E=1) spans 8
+LLM_K = 2
+LLM_LEAN = (0, 1)
+LLM_MAX = (2, 1)
+LLM_PROMPT = 8
+LLM_STEPS = 5
 
 
 def _predict():
@@ -90,7 +108,102 @@ def _cell(emit, out, tag, agree, mean_workers, metrics, decisions=0):
          f"decisions={decisions:.0f}")
 
 
-def run(emit=None):
+def _serve_llm(model_cfg, params, coding, prompts, budgets, arrivals,
+               controller=None, seed=0):
+    """One continuous slot-pool serving run (DESIGN.md §10/§15) under
+    the same adversary/quarantine/churn regime as the engine cells."""
+    from repro.serving import (AdversaryConfig, ChurnModel,
+                               ContinuousConfig, ContinuousLLMExecutor,
+                               ContinuousScheduler, LatencyModel,
+                               QuarantineConfig)
+    executor = ContinuousLLMExecutor(
+        model_cfg, coding, params, pool_groups=2,
+        max_len=LLM_PROMPT + LLM_STEPS + 2)
+    sched = ContinuousScheduler(
+        ContinuousConfig(pool_groups=2, flush_deadline_ms=4.0, seed=seed,
+                         max_new_tokens=LLM_STEPS, controller=controller,
+                         adversary=AdversaryConfig(kind="persistent",
+                                                   sigma=SIGMA, seed=3),
+                         quarantine=QuarantineConfig(probation_ms=30.0),
+                         churn=ChurnModel(mean_up_ms=800.0,
+                                          mean_down_ms=30.0, seed=5)),
+        LatencyModel(tail_prob=0.3), executor)
+    metrics = sched.run(prompts, arrivals, max_new_tokens=budgets)
+    return sched, metrics
+
+
+def _llm_reference(model_cfg, params, prompts, steps):
+    """Uncoded greedy decode — the per-token agreement yardstick."""
+    from repro.models import decode_step, init_caches, prefill
+    tokens = jnp.asarray(np.stack(prompts), jnp.int32)
+    caches = init_caches(model_cfg, tokens.shape[0],
+                         max_len=LLM_PROMPT + steps + 2)
+    logits, caches = prefill(model_cfg, params, {"tokens": tokens}, caches)
+    outs = [np.argmax(np.asarray(logits), -1)]
+    pos = tokens.shape[1]
+    for _ in range(steps - 1):
+        nxt = jnp.argmax(logits, -1)[:, None]
+        logits, caches = decode_step(model_cfg, params, caches,
+                                     {"tokens": nxt},
+                                     jnp.asarray(pos, jnp.int32))
+        outs.append(np.argmax(np.asarray(logits), -1))
+        pos += 1
+    return np.stack(outs, axis=1)              # (n, steps)
+
+
+def _llm_cells(emit, out):
+    """The jitted-LLM facet: lean/max/adaptive over the continuous pool."""
+    from benchmarks import common
+    from repro import configs
+    from repro.core.scheme import get_scheme
+    from repro.models import init_params
+    from repro.serving import ControllerConfig, RedundancyController
+    from repro.serving.scheduler import poisson_arrivals
+
+    n = common.scaled(48, 16)
+    model_cfg = configs.get_reduced("qwen3-0.6b")
+    params = init_params(model_cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, model_cfg.vocab_size,
+                           (LLM_PROMPT,)).astype(np.int32)
+               for _ in range(n)]
+    budgets = rng.randint(1, LLM_STEPS + 1, size=n)   # mixed lengths
+    arrivals = poisson_arrivals(n, 2500.0, seed=11)
+    ref = _llm_reference(model_cfg, params, prompts, LLM_STEPS)
+
+    def agreement(sched):
+        hits = total = 0
+        for uid, toks in sched.results.items():
+            want = ref[uid][:len(toks)]
+            hits += int(np.sum(np.asarray(toks) == want))
+            total += len(toks)
+        return hits / max(total, 1)
+
+    for tag, (s, e) in (("llm_static_lean", LLM_LEAN),
+                        ("llm_static_max", LLM_MAX)):
+        coding = get_scheme("berrut", LLM_K, s=s, e=e).coding
+        sched, metrics = _serve_llm(model_cfg, params, coding, prompts,
+                                    budgets, arrivals)
+        _cell(emit, out, tag, agreement(sched),
+              float(np.mean(sched.round_widths)), metrics)
+
+    ctrl = RedundancyController(
+        get_scheme("berrut", LLM_K, s=LLM_LEAN[0], e=LLM_LEAN[1]),
+        ControllerConfig(window_rounds=4, s_min=0, s_max=LLM_MAX[0],
+                         e_min=0, e_max=LLM_MAX[1], straggle_ms=25.0,
+                         clean_windows_to_shrink=2))
+    # the executor is constructed at the MAX operating point; narrower
+    # rounds mask off coded streams in-program (one trace pair per run)
+    sched, metrics = _serve_llm(model_cfg, params, ctrl.max_scheme.coding,
+                                prompts, budgets, arrivals, controller=ctrl)
+    _cell(emit, out, "llm_adaptive", agreement(sched),
+          float(np.mean(sched.round_widths)), metrics,
+          decisions=len(ctrl.decisions) - 1)
+    out["llm_adaptive"]["decision_log"] = [
+        list(d) for d in ctrl.decision_log()]
+
+
+def run(emit=None, llm=False):
     from benchmarks import common
     from repro.core.scheme import get_scheme
     from repro.serving import (ChurnModel, ControllerConfig,
@@ -130,6 +243,8 @@ def run(emit=None):
           decisions=len(ctrl.decisions) - 1)
     out["adaptive"]["decision_log"] = [
         list(d) for d in ctrl.decision_log()]
+    if llm:
+        _llm_cells(emit, out)
     return out
 
 
@@ -137,6 +252,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-shapes mode (REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("--llm", action="store_true",
+                    help="add the jitted-LLM facet (continuous coded-KV "
+                         "slot pool on a reduced model, DESIGN.md §15)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the policy comparison as JSON (the "
                          "bench-smoke regression gate reads this)")
@@ -144,7 +262,7 @@ def main(argv=None):
     if args.smoke:
         # must precede the benchmarks.common import inside run()
         os.environ["REPRO_BENCH_SMOKE"] = "1"
-    out = run()
+    out = run(llm=args.llm)
     if args.json:
         path = os.path.abspath(args.json)
         os.makedirs(os.path.dirname(path), exist_ok=True)

@@ -23,6 +23,8 @@ uncoded wait-for-all baseline.
   PYTHONPATH=src python examples/serve_coded_llm.py --scheme replication
   PYTHONPATH=src python examples/serve_coded_llm.py --e 1 --adaptive \
       --churn --traffic diurnal --attack intermittent --attack-rate 0.3
+  PYTHONPATH=src python examples/serve_coded_llm.py --e 1 --adaptive \
+      --continuous --quarantine
 
 Any registered redundancy scheme (--scheme berrut|parm|replication|
 uncoded) serves through the same event loop; non-Berrut schemes serve
@@ -36,8 +38,12 @@ budgets, and the whole run traces prefill/decode-step exactly once.
 --adaptive closes the loop (DESIGN.md §12): a RedundancyController
 watches per-window straggler/attack rates and retunes (N, E, wait_for)
 between batches, never dropping the decode wait-for below the locator
-quorum.  --churn adds worker leave/rejoin; --traffic diurnal swaps the
-Poisson arrivals for a diurnal + bursty trace around --rate.
+quorum.  It composes with BOTH berrut LLM paths (--continuous
+included): the executor traces one max-width program at the
+controller's maximum operating point and a narrower (N, E) masks off
+coded streams in-program, so retunes never recompile (DESIGN.md §15).
+--churn adds worker leave/rejoin; --traffic diurnal swaps the Poisson
+arrivals for a diurnal + bursty trace around --rate.
 """
 
 import argparse
@@ -75,7 +81,8 @@ def main():
     ap.add_argument("--probation-ms", type=float, default=200.0)
     ap.add_argument("--adaptive", action="store_true",
                     help="closed-loop (N, E, wait_for) retuning between "
-                         "batches (DESIGN.md §12)")
+                         "batches (DESIGN.md §12/§15; composes with "
+                         "--continuous)")
     ap.add_argument("--churn", action="store_true",
                     help="workers leave/rejoin on exponential clocks")
     ap.add_argument("--traffic", default="poisson",

@@ -41,13 +41,20 @@ the whole run, partial flushes included.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 32 --k 4 --s 1 --e 1 --adaptive --churn --traffic diurnal \
       --attack intermittent --attack-rate 0.3 --quarantine
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 32 --k 4 --s 1 --e 1 --adaptive --continuous \
+      --pool-groups 4 --attack persistent --quarantine
 
 With ``--adaptive`` a ``RedundancyController`` (DESIGN.md §12) watches
 per-window straggler/attack rates and retunes (N, E, wait_for) between
 batches, never letting the decode wait-for fall below the locator
-quorum; ``--churn`` adds worker leave/rejoin on exponential clocks and
-``--traffic diurnal`` replaces the homogeneous Poisson arrivals with a
-diurnal + bursty trace around ``--rate``.
+quorum.  Adaptive redundancy reaches every serving path (DESIGN.md
+§15): the berrut LLM executors — batch-scoped and ``--continuous``
+slot-pool alike — trace ONE max-width program at the controller's
+maximum operating point and mask narrower (N, E) points off in-program,
+so a retune never recompiles.  ``--churn`` adds worker leave/rejoin on
+exponential clocks and ``--traffic diurnal`` replaces the homogeneous
+Poisson arrivals with a diurnal + bursty trace around ``--rate``.
 """
 
 from __future__ import annotations
@@ -120,16 +127,6 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
     if continuous and scheme != "berrut":
         raise ValueError("--continuous drives the jitted berrut slot-pool "
                          f"path; scheme {scheme!r} serves single-shot")
-    if adaptive and continuous:
-        raise ValueError("--adaptive retunes (N, E, wait_for) per batch; "
-                         "the fixed coded-KV slot pool cannot re-plan "
-                         "(drop --continuous)")
-    if adaptive and scheme == "berrut":
-        # the jitted autoregressive executor traces its worker count in,
-        # so it cannot re-plan per batch; adaptive berrut serves the
-        # single-shot EngineExecutor path like the other schemes
-        print("adaptive: berrut serves single-shot next-token prediction "
-              "(the autoregressive executor cannot re-plan per batch)")
     # On-device token selection (DESIGN.md §11): the jitted steps return
     # (B,) int32 sampled ids, never round-tripping (B, V) logits.
     sample = SampleConfig(top_k=top_k, temperature=temperature)
@@ -138,20 +135,28 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
                                  (prompt_len,)).astype(np.int32)
                      for _ in range(requests)]
     budgets = None
+    controller = None
     if adaptive:
-        # per-batch re-planning needs the scheme-generic executor
-        f = jax.jit(make_predict_fn(cfg, params))
-        emb = embed_inputs(cfg, params,
-                           {"tokens": jax.numpy.asarray(
-                               np.stack(token_prompts))})
-        payloads = [np.asarray(emb[i]) for i in range(requests)]
-        executor = EngineExecutor(f, schm)
-    elif scheme == "berrut" and continuous:
+        # bounds: one step of headroom above the CLI operating point on
+        # each axis (E needs at least 1 so the locator can be grown in).
+        # Built BEFORE the executor: the jitted LLM executors trace at
+        # the controller's MAXIMUM operating point and mask narrower
+        # points off in-program (DESIGN.md §15).
+        controller = RedundancyController(schm, ControllerConfig(
+            window_rounds=8, s_min=0, s_max=s + 1,
+            e_min=0, e_max=max(e, 1)))
+        pool = controller.pool
+        print(f"adaptive redundancy: start (S={s}, E={e}), bounds "
+              f"S<={s + 1} E<={max(e, 1)}, pool sized for "
+              f"{pool.num_workers} workers (DESIGN.md §12/§15)")
+    if scheme == "berrut" and continuous:
         # slot-pool continuous batching: mixed per-request generation
         # budgets (1..steps) make groups retire at different rounds, the
         # churn the fixed pool exists to absorb
+        pool_coding = (controller.max_scheme.coding
+                       if controller is not None else coding)
         executor = ContinuousLLMExecutor(
-            cfg, coding, params, pool_groups=pool_groups,
+            cfg, pool_coding, params, pool_groups=pool_groups,
             max_len=prompt_len + steps + 2,
             byz_collude=(attack == "colluding" and e > 0),
             sample=sample, sample_seed=seed)
@@ -159,8 +164,12 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         budgets = rng.randint(1, steps + 1, size=requests)
     elif scheme == "berrut":
         # jitted autoregressive coded-LLM path: payloads are token
-        # prompts, every decode round is a coded dispatch
-        executor = CodedLLMExecutor(cfg, coding, params, steps=steps,
+        # prompts, every decode round is a coded dispatch; under
+        # --adaptive the ONE traced program covers the max operating
+        # point and retunes dispatch to a maskable prefix of its grid
+        exec_coding = (controller.max_scheme.coding
+                       if controller is not None else coding)
+        executor = CodedLLMExecutor(cfg, exec_coding, params, steps=steps,
                                     max_len=prompt_len + steps + 2,
                                     seed=seed, sample=sample)
         payloads = token_prompts
@@ -196,17 +205,6 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
     churn_model = (ChurnModel(mean_up_ms=churn_up_ms,
                               mean_down_ms=churn_down_ms, seed=seed + 7)
                    if churn else None)
-    controller = None
-    if adaptive:
-        # bounds: one step of headroom above the CLI operating point on
-        # each axis (E needs at least 1 so the locator can be grown in)
-        controller = RedundancyController(schm, ControllerConfig(
-            window_rounds=8, s_min=0, s_max=s + 1,
-            e_min=0, e_max=max(e, 1)))
-        pool = controller.pool
-        print(f"adaptive redundancy: start (S={s}, E={e}), bounds "
-              f"S<={s + 1} E<={max(e, 1)}, pool sized for "
-              f"{pool.num_workers} workers (DESIGN.md §12)")
     arrival_ms = None
     if traffic == "diurnal":
         # diurnal + bursty non-homogeneous Poisson trace; --rate is the
@@ -214,20 +212,26 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
         arrival_ms = trace_arrivals(requests,
                                     TrafficModel(base_rate_rps=rate_rps),
                                     seed=seed + 11)
+    # under adaptive berrut the executor runs the controller's MAX point,
+    # not the CLI (s, e) point — declare no scheme and let the executor's
+    # own win (the controller validates base-K compatibility)
+    adaptive_llm = controller is not None and scheme == "berrut"
     if continuous:
         sched = ContinuousScheduler(
-            ContinuousConfig(coding=coding, pool_groups=pool_groups,
+            ContinuousConfig(coding=None if adaptive_llm else coding,
+                             pool_groups=pool_groups,
                              flush_deadline_ms=flush_deadline_ms,
                              slo_ms=slo_ms, seed=seed, adversary=adversary,
                              quarantine=quarantine_cfg, churn=churn_model,
-                             max_new_tokens=steps),
+                             controller=controller, max_new_tokens=steps),
             latency_model, executor)
         print(f"continuous batching over {pool_groups} group slots "
-              f"({pool_groups * coding.num_workers} pooled coded streams), "
-              f"per-request budgets 1..{steps}")
+              f"({pool_groups * executor.coding.num_workers} pooled coded "
+              f"streams), per-request budgets 1..{steps}")
     else:
         sched = CodedScheduler(
-            SchedulerConfig(scheme=schm, groups_per_batch=groups_per_batch,
+            SchedulerConfig(scheme=None if adaptive_llm else schm,
+                            groups_per_batch=groups_per_batch,
                             flush_deadline_ms=flush_deadline_ms,
                             slo_ms=slo_ms, seed=seed, adversary=adversary,
                             quarantine=quarantine_cfg,
@@ -273,7 +277,8 @@ def run(arch: str, reduced: bool, requests: int, k: int, s: int, e: int,
             print(f"  request {r}: {sched.results[r].tolist()}")
         return [sched.results[u] for u in uids]
     outs = np.stack([sched.results[u] for u in uids])
-    if scheme == "berrut" and not adaptive:
+    if scheme == "berrut":
+        # the jitted LLM paths (adaptive included) emit token matrices
         toks = outs
     else:
         # scheme-generic path served last-position logits: report the
@@ -327,8 +332,10 @@ def main():
                     help="quarantine duration before re-admission")
     ap.add_argument("--adaptive", action="store_true",
                     help="closed-loop (N, E, wait_for) retuning between "
-                         "batches (DESIGN.md §12); serves single-shot "
-                         "through the scheme-generic executor")
+                         "batches (DESIGN.md §12/§15); berrut keeps the "
+                         "jitted LLM paths (masked max-width programs, "
+                         "--continuous included), other schemes serve "
+                         "single-shot through the scheme-generic executor")
     ap.add_argument("--churn", action="store_true",
                     help="workers leave/rejoin on their own exponential "
                          "clocks (spot preemption, deploys)")

@@ -82,7 +82,8 @@ def _real_streams(coding: CodingConfig, coded_logits: jnp.ndarray,
 
 
 def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
-           avail: jnp.ndarray, worker_major: bool = False
+           avail: jnp.ndarray, worker_major: bool = False,
+           locate_quorum: Optional[jnp.ndarray] = None
            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Vote-gated Algorithm 2 per group over in-program coded logits.
 
@@ -92,6 +93,14 @@ def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
     The vote coordinates are gathered from the raw block BEFORE the
     float32 upcast (``gather_vote_values``): only the (G, N+1, C_vote)
     slice is ever cast, never a full copy of the coded-logit block.
+
+    ``locate_quorum`` (a traced int32 scalar, DESIGN.md §15) gates the
+    verdicts per ROUND instead of per trace: when fewer than
+    ``locate_quorum`` streams are available the locator's exclusions are
+    suppressed (below the K+2E budget error location is hopeless — the
+    host-side ``EngineExecutor`` makes the same call, but there the
+    quorum is a Python branch; here it must be data so re-planned rounds
+    don't retrace).  ``None`` keeps the unconditional verdicts.
 
     coded_logits: (G*(N+1), V).  Returns (per-group decode masks (G, N+1),
     located (G, N+1) bool, votes (G, N+1) int32); with E == 0 the masks
@@ -114,6 +123,9 @@ def locate(coding: CodingConfig, coded_logits: jnp.ndarray,
     betas = jnp.asarray(coding.betas, jnp.float32)
     located, votes = locate_groups(betas, vals, avail,
                                    k=coding.k, e=coding.e)
+    if locate_quorum is not None:
+        located = jnp.logical_and(
+            located, jnp.sum(avail) >= locate_quorum)
     masks = avail[None, :] * (1.0 - located.astype(avail.dtype))
     return masks, located, votes
 
@@ -163,8 +175,25 @@ class CodedServingState:
     pos: jnp.ndarray               # () int32 — next position to write
 
 
+def _compose_live(straggler_mask: Optional[jnp.ndarray],
+                  live_mask: Optional[jnp.ndarray]
+                  ) -> Optional[jnp.ndarray]:
+    """Compose the per-stream ``live_mask`` of the current operating
+    point into the round's straggler mask (DESIGN.md §15): a retune to a
+    narrower (N, E) masks off the trailing coded streams exactly like
+    stragglers, so the one max-width program serves every operating
+    point.  A ``live_mask`` of ones (or None) is bit-identical to the
+    pre-replan program: ``x * 1.0 == x`` exactly in float."""
+    if live_mask is None:
+        return straggler_mask
+    if straggler_mask is None:
+        return live_mask
+    return straggler_mask * live_mask
+
+
 def _finish_round(coding: CodingConfig, coded_logits: jnp.ndarray,
-                  straggler_mask: Optional[jnp.ndarray], with_report: bool):
+                  straggler_mask: Optional[jnp.ndarray], with_report: bool,
+                  locate_quorum: Optional[jnp.ndarray] = None):
     """Shared tail of every coded round: locate -> exclude -> decode,
     fused (DESIGN.md §11).
 
@@ -185,7 +214,8 @@ def _finish_round(coding: CodingConfig, coded_logits: jnp.ndarray,
     g = coded_logits.shape[0] // coding.num_workers
     # ONE locate definition: the same ``locate`` the offline verifiers
     # call produces the per-group exclusion masks the fused decode eats
-    masks, located, votes = locate(coding, coded_logits, avail)
+    masks, located, votes = locate(coding, coded_logits, avail,
+                                   locate_quorum=locate_quorum)
     grouped = coded_logits.reshape(g, coding.num_workers, v)
     logits = ops.fused_group_decode(
         grouped, masks.astype(jnp.float32),
@@ -202,7 +232,8 @@ def _finish_round_wm(coding: CodingConfig, coded_logits: jnp.ndarray,
                      with_report: bool, wshard: WorkerShardConfig,
                      sample: Optional[SampleConfig],
                      sample_rng: Optional[jax.Array],
-                     row_mask: Optional[jnp.ndarray] = None):
+                     row_mask: Optional[jnp.ndarray] = None,
+                     locate_quorum: Optional[jnp.ndarray] = None):
     """Worker-sharded round tail (DESIGN.md §13).
 
     The coded logits arrive worker-major — stream ``n*G + g`` — so the
@@ -221,7 +252,8 @@ def _finish_round_wm(coding: CodingConfig, coded_logits: jnp.ndarray,
     v = coded_logits.shape[-1]
     g = coded_logits.shape[0] // coding.num_workers
     masks, located, votes = locate(coding, coded_logits, avail,
-                                   worker_major=True)
+                                   worker_major=True,
+                                   locate_quorum=locate_quorum)
     block = coded_logits.reshape(coding.num_workers, g, v)
     out = worker_mesh.survivor_decode_tail(
         coding, block, masks, avail, wshard, row_mask=row_mask,
@@ -250,12 +282,18 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                   with_report: bool = False,
                   sample: Optional[SampleConfig] = None,
                   sample_rng: Optional[jax.Array] = None,
-                  wshard: Optional[WorkerShardConfig] = None):
+                  wshard: Optional[WorkerShardConfig] = None,
+                  live_mask: Optional[jnp.ndarray] = None,
+                  locate_quorum: Optional[jnp.ndarray] = None):
     """Prefill G*K real prompts as G*(N+1) coded streams.
 
     inputs: modality dict with leading batch = G*K real queries.
     Byzantine workers (``byz_mask``) corrupt their prefill logits exactly
     like a decode step's — the adversary does not wait for decode rounds.
+    ``live_mask`` masks off the coded streams beyond the current
+    operating point's width and ``locate_quorum`` gates the locator's
+    verdicts per round (masked max-width re-planning, DESIGN.md §15);
+    both default to the static single-operating-point behavior.
     Returns (decoded last-token logits (G*K, V) — or, with ``sample``,
     on-device-sampled (G*K,) int32 token ids — and the serving state);
     with ``with_report`` also the (located, votes) pair of the vote-gated
@@ -263,6 +301,7 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     """
     global CODED_PREFILL_TRACES
     CODED_PREFILL_TRACES += 1
+    straggler_mask = _compose_live(straggler_mask, live_mask)
     x = embed_inputs(cfg, params, inputs)                 # (G*K, S, d)
     gk, s, d = x.shape
     g = gk // coding.k
@@ -281,10 +320,12 @@ def coded_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     if wm:
         out, report = _finish_round_wm(coding, coded_logits,
                                        straggler_mask, with_report,
-                                       wshard, sample, sample_rng)
+                                       wshard, sample, sample_rng,
+                                       locate_quorum=locate_quorum)
     else:
         logits, report = _finish_round(coding, coded_logits,
-                                       straggler_mask, with_report)
+                                       straggler_mask, with_report,
+                                       locate_quorum=locate_quorum)
         out = _maybe_sample(logits, sample, sample_rng)
     state = CodedServingState(caches=caches,
                               pos=jnp.asarray(s, jnp.int32))
@@ -302,20 +343,25 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
                       with_report: bool = False,
                       sample: Optional[SampleConfig] = None,
                       sample_rng: Optional[jax.Array] = None,
-                      wshard: Optional[WorkerShardConfig] = None):
+                      wshard: Optional[WorkerShardConfig] = None,
+                      live_mask: Optional[jnp.ndarray] = None,
+                      locate_quorum: Optional[jnp.ndarray] = None):
     """One coded decode step.
 
     tokens: (G*K, 1) int32 — the sampled next token of each REAL stream.
     The K token embeddings of each group are Berrut-encoded into N+1 coded
     embeddings appended to the coded caches (DESIGN.md §5).  With
     ``byz_collude`` every Byzantine worker in a group adds the SAME noise
-    (the colluding adversary of ``serving.failures``).
+    (the colluding adversary of ``serving.failures``).  ``live_mask`` /
+    ``locate_quorum`` re-plan the operating point per round without
+    retracing (DESIGN.md §15).
     Returns (decoded logits (G*K, V) — or sampled (G*K,) token ids with
     ``sample`` — and the new state); with ``with_report`` also the
     locator's (located, votes).
     """
     global CODED_DECODE_STEP_TRACES
     CODED_DECODE_STEP_TRACES += 1
+    straggler_mask = _compose_live(straggler_mask, live_mask)
     from repro.models import layers as _layers
     x = _layers.embed_tokens(cfg, params["embeddings"], tokens)  # (G*K,1,d)
     gk, _, d = x.shape
@@ -333,10 +379,12 @@ def coded_decode_step(cfg: ModelConfig, coding: CodingConfig, params: dict,
     if wm:
         out, report = _finish_round_wm(coding, coded_logits,
                                        straggler_mask, with_report,
-                                       wshard, sample, sample_rng)
+                                       wshard, sample, sample_rng,
+                                       locate_quorum=locate_quorum)
     else:
         logits, report = _finish_round(coding, coded_logits,
-                                       straggler_mask, with_report)
+                                       straggler_mask, with_report,
+                                       locate_quorum=locate_quorum)
         out = _maybe_sample(logits, sample, sample_rng)
     new_state = CodedServingState(caches=caches, pos=state.pos + 1)
     if with_report:
@@ -419,7 +467,8 @@ def _finish_pool_round(coding: CodingConfig, coded_logits: jnp.ndarray,
                        with_report: bool,
                        wshard: Optional[WorkerShardConfig] = None,
                        sample: Optional[SampleConfig] = None,
-                       sample_rng: Optional[jax.Array] = None):
+                       sample_rng: Optional[jax.Array] = None,
+                       locate_quorum: Optional[jnp.ndarray] = None):
     """``_finish_round`` with the active-slot mask composed in: free
     slots' streams are excluded from the locator's verdicts (their
     garbage logits must not feed reputation) and their decoded rows are
@@ -435,14 +484,16 @@ def _finish_pool_round(coding: CodingConfig, coded_logits: jnp.ndarray,
         per_query = jnp.repeat(group_mask, coding.k)       # (P*K,)
         out, (located, votes) = _finish_round_wm(
             coding, coded_logits, straggler_mask, True, wshard,
-            sample, sample_rng, row_mask=per_query)
+            sample, sample_rng, row_mask=per_query,
+            locate_quorum=locate_quorum)
         located = jnp.logical_and(located, live[:, None])
         votes = votes * live[:, None].astype(votes.dtype)
         if with_report:
             return out, (located, votes)
         return out, None
     logits, report = _finish_round(coding, coded_logits, straggler_mask,
-                                   with_report=True)
+                                   with_report=True,
+                                   locate_quorum=locate_quorum)
     located, votes = report
     located = jnp.logical_and(located, live[:, None])
     votes = votes * live[:, None].astype(votes.dtype)
@@ -464,7 +515,9 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
                        with_report: bool = False,
                        sample: Optional[SampleConfig] = None,
                        sample_rng: Optional[jax.Array] = None,
-                       wshard: Optional[WorkerShardConfig] = None):
+                       wshard: Optional[WorkerShardConfig] = None,
+                       live_mask: Optional[jnp.ndarray] = None,
+                       locate_quorum: Optional[jnp.ndarray] = None):
     """Prefill admitted group slots INTO the persistent pool.
 
     inputs: modality dict with leading batch = pool_groups*K query rows
@@ -484,6 +537,7 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     """
     global CODED_PREFILL_TRACES
     CODED_PREFILL_TRACES += 1
+    straggler_mask = _compose_live(straggler_mask, live_mask)
     x = embed_inputs(cfg, params, inputs)                 # (P*K, S, d)
     gk, s, d = x.shape
     g = gk // coding.k
@@ -507,11 +561,13 @@ def coded_pool_prefill(cfg: ModelConfig, coding: CodingConfig, params: dict,
     if wm:
         out, report = _finish_pool_round(coding, coded_logits, admit_mask,
                                          straggler_mask, with_report,
-                                         wshard, sample, sample_rng)
+                                         wshard, sample, sample_rng,
+                                         locate_quorum=locate_quorum)
     else:
         logits, report = _finish_pool_round(coding, coded_logits,
                                             admit_mask, straggler_mask,
-                                            with_report)
+                                            with_report,
+                                            locate_quorum=locate_quorum)
         out = _maybe_sample(logits, sample, sample_rng)
     new_state = CodedPoolState(caches=caches, pos=new_pos)
     if with_report:
@@ -530,7 +586,9 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
                            with_report: bool = False,
                            sample: Optional[SampleConfig] = None,
                            sample_rng: Optional[jax.Array] = None,
-                           wshard: Optional[WorkerShardConfig] = None):
+                           wshard: Optional[WorkerShardConfig] = None,
+                           live_mask: Optional[jnp.ndarray] = None,
+                           locate_quorum: Optional[jnp.ndarray] = None):
     """One decode round over the WHOLE pool.
 
     tokens: (pool_groups*K, 1) int32 — the sampled next token of every
@@ -546,6 +604,7 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
     """
     global CODED_DECODE_STEP_TRACES
     CODED_DECODE_STEP_TRACES += 1
+    straggler_mask = _compose_live(straggler_mask, live_mask)
     from repro.models import layers as _layers
     x = _layers.embed_tokens(cfg, params["embeddings"], tokens)  # (P*K,1,d)
     gk, _, d = x.shape
@@ -574,11 +633,13 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
         out, report = _finish_pool_round(coding, coded_logits,
                                          active_mask, straggler_mask,
                                          with_report, wshard, sample,
-                                         sample_rng)
+                                         sample_rng,
+                                         locate_quorum=locate_quorum)
     else:
         logits, report = _finish_pool_round(coding, coded_logits,
                                             active_mask, straggler_mask,
-                                            with_report)
+                                            with_report,
+                                            locate_quorum=locate_quorum)
         out = _maybe_sample(logits, sample, sample_rng)
     new_pos = state.pos + (active_mask > 0).astype(jnp.int32)
     new_state = CodedPoolState(caches=caches, pos=new_pos)

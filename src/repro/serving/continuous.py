@@ -49,6 +49,7 @@ from repro.serving.batcher import GroupBatcher
 from repro.serving.coded_serving import (coded_pool_decode_step,
                                          coded_pool_prefill,
                                          init_pool_state)
+from repro.serving.controller import RedundancyController
 from repro.serving.failures import (AdversaryConfig, RoundAttack,
                                     make_adversary)
 from repro.serving.latency import ChurnModel, LatencyModel, WorkerChurn
@@ -56,6 +57,7 @@ from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.quarantine import QuarantineConfig, WorkerReputation
 from repro.serving.sampling import SampleConfig
 from repro.serving.scheduler import (LocateReport, apply_pool_state,
+                                     check_gather_bound,
                                      derive_seed_streams, resolve_arrivals,
                                      round_ground_truth)
 
@@ -79,10 +81,14 @@ class ContinuousConfig:
     adversary: Optional[AdversaryConfig] = None
     quarantine: Optional[QuarantineConfig] = None
     # worker churn on the event clock (DESIGN.md §12); a churned-out
-    # worker's results never land, exactly like a quarantine hold.  The
-    # jitted pool shapes are fixed, so the controller does not apply
-    # here — churn and the quorum invariant do.
+    # worker's results never land, exactly like a quarantine hold.
     churn: Optional[ChurnModel] = None
+    # Adaptive (N, E, wait_for) retuning between rounds (DESIGN.md §15):
+    # the jitted pool shapes stay fixed at the controller's MAXIMUM
+    # operating point (construct the executor at controller.max_scheme);
+    # a narrower point masks off the beyond-width coded streams
+    # in-program via the per-round live mask — no retrace, ever.
+    controller: Optional["RedundancyController"] = None
     # "continuous": admit into free slots every round (the tentpole);
     # "run_to_completion": admit only into an EMPTY pool — the
     # batch-scoped baseline at the same pool/worker budget.
@@ -136,7 +142,18 @@ class ContinuousLLMExecutor:
     (``SampleConfig``; greedy by default): ``prefill``/``decode``
     return (pool_groups*K,) int32 token ids, not (pool_groups*K, V)
     logits.
+
+    Adaptive redundancy (DESIGN.md §15): construct the executor at the
+    controller's MAXIMUM operating point (``controller.max_scheme``).
+    The per-round ``live_mask`` masks off the coded streams beyond the
+    current operating point's width in-program (composed into the
+    straggler mask, exactly like a straggler), and ``locate_quorum`` is
+    a traced per-round argument — both are normalized to constant-
+    structure arrays (ones / int32 0, bit-identical defaults), so the
+    two-traces-per-run contract survives every retune.
     """
+
+    supports_replan = True
 
     def __init__(self, model_cfg, coding, params, pool_groups: int,
                  max_len: int, byz_collude: bool = False,
@@ -160,20 +177,25 @@ class ContinuousLLMExecutor:
         # + survivor-only gather inside, same donation/compile contracts
         self.wshard = wshard
         self._key = jax.random.PRNGKey(sample_seed)
+        self.max_replan_workers = coding.num_workers
         sample_cfg = self.sample
         self._prefill = jax.jit(
-            lambda p, st, t, a, m, bm, br, bs, sr: coded_pool_prefill(
+            lambda p, st, t, a, m, bm, br, bs, sr, live, lq:
+            coded_pool_prefill(
                 model_cfg, coding, p, st, {"tokens": t}, max_len, a,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
                 byz_collude=byz_collude, with_report=True,
-                sample=sample_cfg, sample_rng=sr, wshard=wshard),
+                sample=sample_cfg, sample_rng=sr, wshard=wshard,
+                live_mask=live, locate_quorum=lq),
             donate_argnums=(1,))
         self._decode = jax.jit(
-            lambda p, st, t, a, m, bm, br, bs, sr: coded_pool_decode_step(
+            lambda p, st, t, a, m, bm, br, bs, sr, live, lq:
+            coded_pool_decode_step(
                 model_cfg, coding, p, st, t, a,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
                 byz_collude=byz_collude, with_report=True,
-                sample=sample_cfg, sample_rng=sr, wshard=wshard),
+                sample=sample_cfg, sample_rng=sr, wshard=wshard,
+                live_mask=live, locate_quorum=lq),
             donate_argnums=(1,))
 
     def init_state(self):
@@ -211,26 +233,45 @@ class ContinuousLLMExecutor:
             masks=np.broadcast_to(mask, (g, len(mask)))
             * (1.0 - located.astype(np.float32)))
 
+    def _replan_args(self, live_mask, locate_quorum):
+        """Constant-structure re-plan args: an all-live round with no
+        quorum gate is ones / int32 0 — bit-identical defaults
+        (``x * 1.0 == x``; ``sum(avail) >= 0`` is always true)."""
+        live = (np.ones((self.coding.num_workers,), np.float32)
+                if live_mask is None
+                else np.asarray(live_mask, np.float32))
+        lq = jnp.asarray(0 if locate_quorum is None else locate_quorum,
+                         jnp.int32)
+        return jnp.asarray(live), lq
+
     def prefill(self, state, prompts: np.ndarray, admit_mask: np.ndarray,
-                mask: np.ndarray, attack: Optional[RoundAttack] = None):
+                mask: np.ndarray, attack: Optional[RoundAttack] = None,
+                live_mask: Optional[np.ndarray] = None,
+                locate_quorum: Optional[int] = None):
         """Consumes ``state`` (donated); returns ((P*K,) int32 sampled
         token ids, new state, locate report)."""
         bm, br, bs = self._byz_args(attack)
+        live, lq = self._replan_args(live_mask, locate_quorum)
         tokens, state, report = self._prefill(
             self.params, state, jnp.asarray(prompts, jnp.int32),
             jnp.asarray(admit_mask, jnp.float32),
-            jnp.asarray(mask, jnp.float32), bm, br, bs, self._next_rng())
+            jnp.asarray(mask, jnp.float32), bm, br, bs, self._next_rng(),
+            live, lq)
         return np.asarray(tokens), state, self._report(mask, report)
 
     def decode(self, state, tokens: np.ndarray, active_mask: np.ndarray,
-               mask: np.ndarray, attack: Optional[RoundAttack] = None):
+               mask: np.ndarray, attack: Optional[RoundAttack] = None,
+               live_mask: Optional[np.ndarray] = None,
+               locate_quorum: Optional[int] = None):
         """Consumes ``state`` (donated); returns ((P*K,) int32 sampled
         token ids, new state, locate report)."""
         bm, br, bs = self._byz_args(attack)
+        live, lq = self._replan_args(live_mask, locate_quorum)
         toks, state, report = self._decode(
             self.params, state, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(active_mask, jnp.float32),
-            jnp.asarray(mask, jnp.float32), bm, br, bs, self._next_rng())
+            jnp.asarray(mask, jnp.float32), bm, br, bs, self._next_rng(),
+            live, lq)
         return np.asarray(toks), state, self._report(mask, report)
 
 
@@ -271,8 +312,33 @@ class ContinuousScheduler:
         self.results: Dict[int, np.ndarray] = {}
         self.groups: List[SlotGroup] = []       # every admitted group
         self.trace: List[tuple] = []            # golden event log
+        # per-round dispatch widths (== num_workers at the round's
+        # operating point) — the adaptive benchmark's cost axis
+        self.round_widths: List[int] = []
         self._wait_for = (scheme.decode_quorum if config.wait_for is None
                           else config.wait_for)
+        self.controller = config.controller
+        if self.controller is not None:
+            if not getattr(executor, "supports_replan", False):
+                raise ValueError(
+                    "adaptive redundancy needs an executor that re-plans "
+                    f"per round; {type(executor).__name__} cannot")
+            base = self.controller.base
+            if base.name != scheme.name or base.k != scheme.k:
+                raise ValueError(
+                    f"controller tunes scheme {base.name!r} K={base.k} "
+                    f"but the executor runs {scheme.name!r} K={scheme.k}")
+            if config.wait_for is not None:
+                raise ValueError("wait_for is controller-managed under "
+                                 "adaptive redundancy")
+            max_w = getattr(executor, "max_replan_workers",
+                            scheme.num_workers)
+            if self.controller.pool.num_workers > max_w:
+                raise ValueError(
+                    f"the controller's maximum operating point dispatches "
+                    f"{self.controller.pool.num_workers} workers but the "
+                    f"executor's traced pool covers {max_w}: construct "
+                    f"the executor at controller.max_scheme")
         wshard = getattr(executor, "wshard", None)
         if wshard is not None:
             # survivor-only decode keeps a static gather width; a round
@@ -448,40 +514,68 @@ class ContinuousScheduler:
         active = [g for g in self._slots if g is not None and g.prefilled]
         if not admitted and not active:
             return
-        times = self.latency_model.sample(self._rng,
-                                          self.scheme.num_workers)
+        full = self.scheme.num_workers
+        # the round's operating point is pinned here: the controller may
+        # retune BETWEEN rounds, never under one.  A narrower point
+        # dispatches to a PREFIX of the traced max-width pool; the
+        # beyond-width streams are masked off in-program (DESIGN.md §15).
+        if self.controller is not None:
+            point = self.controller.scheme
+            wait_target = self.controller.wait_for
+        else:
+            point, wait_target = self.scheme, self._wait_for
+        width = point.num_workers
+        # latency draws always cover the widest pool (adaptive rounds
+        # slice a prefix), so the RNG stream — and the golden trace —
+        # does not depend on the controller's decisions
+        times = self.latency_model.sample(self._rng, full)
         # quarantined / churned-out workers are pre-masked out of the
         # wait-for selection; the quorum invariant (apply_pool_state,
         # DESIGN.md §12) early-readmits held workers rather than let the
         # round silently wait below the K+2E locator quorum
-        wait, times, degraded, _ = apply_pool_state(
-            self.scheme, self._wait_for, times, now,
+        wait, times_w, degraded, locate_quorum = apply_pool_state(
+            point, wait_target, times[:width], now,
             reputation=self.reputation, churn=self._churn)
         if degraded:
             self.metrics.degraded_rounds += 1
-        mask, trigger = mask_from_completion_times(self.scheme, times,
-                                                   wait_for=wait)
+        mask_w, trigger = mask_from_completion_times(point, times_w,
+                                                     wait_for=wait)
         attack = (self.adversary.next_round()
                   if self.adversary is not None else None)
+        # the round's mask/attack live at the traced pool width; streams
+        # beyond the operating point are not dispatched (mask 0), so the
+        # adversary cannot corrupt through them either
+        mask = np.zeros((full,), np.float32)
+        mask[:width] = mask_w
+        if attack is not None and width < full:
+            am = np.array(attack.mask, np.float32)
+            am[width:] = 0.0
+            attack = dataclasses.replace(attack, mask=am)
         self._inflight = True
+        self.round_widths.append(width)
         self.trace.append(("round", self._round_idx, now,
                            tuple(g.gid for g in admitted),
                            tuple(g.gid for g in active),
                            tuple(np.flatnonzero(mask).tolist())))
         self._push(now + float(trigger), _ROUND,
-                   (admitted, active, mask, attack))
+                   (admitted, active, mask, attack, width, locate_quorum,
+                    times_w, float(trigger)))
 
     def _on_round(self, t: float, data) -> None:
-        admitted, active, mask, attack = data
+        (admitted, active, mask, attack, width, locate_quorum, times_w,
+         trigger) = data
         self._inflight = False
         self.metrics.rounds += 1
         pool = self.pool_groups
+        live = (np.arange(self.scheme.num_workers) < width).astype(
+            np.float32)
         reports = []
         if admitted:
             admit_mask = np.zeros((pool,), np.float32)
             admit_mask[[g.slot for g in admitted]] = 1.0
             tokens, self._state, report = self.executor.prefill(
-                self._state, self._prompt_buf, admit_mask, mask, attack)
+                self._state, self._prompt_buf, admit_mask, mask, attack,
+                live_mask=live, locate_quorum=locate_quorum)
             reports.append((report, admit_mask))
             for g in admitted:
                 g.prefilled = True
@@ -490,11 +584,13 @@ class ContinuousScheduler:
             act_mask = np.zeros((pool,), np.float32)
             act_mask[[g.slot for g in active]] = 1.0
             tokens, self._state, report = self.executor.decode(
-                self._state, self._token_buf, act_mask, mask, attack)
+                self._state, self._token_buf, act_mask, mask, attack,
+                live_mask=live, locate_quorum=locate_quorum)
             reports.append((report, act_mask))
             for g in active:
                 self._emit(g, tokens, t, first=False)
         self._observe(t, mask, attack, reports)
+        self._control(t, times_w, trigger, reports)
         for g in admitted + active:
             if g.done.all() and self._slots[g.slot] is g:
                 self._slots[g.slot] = None
@@ -571,3 +667,35 @@ class ContinuousScheduler:
         self.metrics.observe_locate(detected, true_corrupt, decode_corrupt)
         if self.reputation is not None:
             self.reputation.observe(t, detected, dispatched)
+
+    def _control(self, t: float, times_w: np.ndarray, trigger: float,
+                 reports: List[tuple]) -> None:
+        """Feed one pool round's telemetry to the adaptive controller.
+
+        The mixed round's per-call reports merge into ONE observation
+        (concatenated along the group axis — ``detected`` is their
+        union), mirroring ``_observe``: one coded dispatch, one strike.
+        ``times_w`` are the operating point's sliced completion times,
+        so the straggle statistic matches what the round dispatched.
+        """
+        if self.controller is None:
+            return
+        live = [r for r, _ in reports if r is not None]
+        merged = None
+        if live:
+            merged = LocateReport(
+                located=np.concatenate([r.located for r in live]),
+                votes=np.concatenate([r.votes for r in live]),
+                masks=np.concatenate([r.masks for r in live]))
+        before = len(self.controller.decisions)
+        held = (int(self.reputation.quarantined.sum())
+                if self.reputation is not None else 0)
+        decision = self.controller.observe_round(
+            t, times=times_w, trigger_ms=trigger, report=merged,
+            quarantined=held)
+        self.metrics.control_decisions += \
+            len(self.controller.decisions) - before
+        if decision is not None:
+            check_gather_bound(self.executor, decision.wait_for)
+            self.trace.append(("retune", t, decision.num_workers,
+                               decision.e, decision.wait_for))

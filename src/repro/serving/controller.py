@@ -79,6 +79,12 @@ class ControllerConfig:
     grow_e_above: float = 0.05     # confirmed-attack round rate grows E
     clean_windows_to_shrink: int = 2
     target_p99_ms: Optional[float] = None   # round-trigger p99 target
+    # Optional discrete operating-point set: decisions snap to the
+    # nearest (s, e) in this set (ties toward MORE redundancy), so a
+    # controller can drive an executor that pre-traced exactly these
+    # points (``CodedLLMExecutor(operating_points=...)``, DESIGN.md §15).
+    # Points must lie inside the [s_min, s_max] x [e_min, e_max] box.
+    allowed_points: Optional[Tuple[Tuple[int, int], ...]] = None
 
     def __post_init__(self):
         if self.window_rounds < 1:
@@ -89,6 +95,18 @@ class ControllerConfig:
             raise ValueError(f"need 0 <= e_min <= e_max, got {self}")
         if self.clean_windows_to_shrink < 1:
             raise ValueError("clean_windows_to_shrink must be >= 1")
+        if self.allowed_points is not None:
+            pts = tuple((int(s), int(e)) for s, e in self.allowed_points)
+            if not pts:
+                raise ValueError("allowed_points must be non-empty")
+            for s, e in pts:
+                if not (self.s_min <= s <= self.s_max
+                        and self.e_min <= e <= self.e_max):
+                    raise ValueError(
+                        f"allowed point (s={s}, e={e}) outside the "
+                        f"[{self.s_min}, {self.s_max}] x "
+                        f"[{self.e_min}, {self.e_max}] box")
+            object.__setattr__(self, "allowed_points", pts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,11 +137,22 @@ class RedundancyController:
         cfg = self.config
         self._s = int(np.clip(self.base.s, cfg.s_min, cfg.s_max))
         self._e = int(np.clip(self.base.e, cfg.e_min, cfg.e_max))
+        self._s, self._e = self._snap(self._s, self._e)
         self._schemes = {}
-        # materialize the corners up front: an unreachable operating
-        # point (e.g. ParM at e=1) fails at construction, not mid-run
-        self._max = self._at(cfg.s_max, cfg.e_max)
-        self._at(cfg.s_min, cfg.e_min)
+        if cfg.allowed_points is not None:
+            # the maximal point is the widest allowed one; materialize
+            # every declared point up front (an unreachable one fails at
+            # construction, and executors may pre-trace the full set)
+            for s, e in cfg.allowed_points:
+                self._at(s, e)
+            self._max = max(
+                (self._at(s, e) for s, e in cfg.allowed_points),
+                key=lambda sc: (sc.num_workers, sc.e, sc.s))
+        else:
+            # materialize the corners up front: an unreachable operating
+            # point (e.g. ParM at e=1) fails at construction, not mid-run
+            self._max = self._at(cfg.s_max, cfg.e_max)
+            self._at(cfg.s_min, cfg.e_min)
         self.decisions: List[ControlDecision] = [ControlDecision(
             t_ms=0.0, round_idx=0, s=self._s, e=self._e,
             num_workers=self.scheme.num_workers,
@@ -141,6 +170,17 @@ class RedundancyController:
         self._calm_s_windows = 0
 
     # -- operating point -------------------------------------------------
+
+    def _snap(self, s: int, e: int) -> Tuple[int, int]:
+        """Snap a requested (s, e) to the nearest allowed operating point
+        (identity without ``allowed_points``).  Nearest by L1 distance;
+        ties break toward MORE redundancy (larger (e, s)) — when the
+        policy wants to move, never under-provision on a coin flip."""
+        pts = self.config.allowed_points
+        if pts is None or (s, e) in pts:
+            return s, e
+        return min(pts, key=lambda p: (abs(p[0] - s) + abs(p[1] - e),
+                                       -p[1], -p[0]))
 
     def _at(self, s: int, e: int) -> RedundancyScheme:
         key = (s, e)
@@ -160,10 +200,18 @@ class RedundancyController:
         return self.scheme.decode_quorum
 
     @property
+    def max_scheme(self) -> RedundancyScheme:
+        """The MAXIMUM operating point's scheme — what a pre-traced
+        executor (masked max-width ``CodedLLMExecutor`` /
+        ``ContinuousLLMExecutor``, DESIGN.md §15) must be constructed at
+        so every narrower point is a maskable prefix of its grid."""
+        return self._max
+
+    @property
     def pool(self) -> PoolView:
         """The maximal pool the per-worker state is sized to."""
         return PoolView(num_workers=self._max.num_workers,
-                        e=self.config.e_max)
+                        e=self._max.e)
 
     def decision_log(self) -> List[Tuple[int, int, int, int]]:
         """Compact (num_workers, e, wait_for, round_idx) tuples — the
@@ -265,6 +313,7 @@ class RedundancyController:
             self._calm_s_windows = 0
 
         self._reset_window()
+        s, e = self._snap(s, e)
         if (s, e) == (self._s, self._e):
             return None
         self._s, self._e = s, e

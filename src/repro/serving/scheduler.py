@@ -181,6 +181,32 @@ def apply_pool_state(scheme, wait_target: int, times: np.ndarray,
     return wait, times, degraded, locate_quorum
 
 
+def check_gather_bound(executor, wait_for: int) -> None:
+    """Re-validate the worker-shard gather width against a (re)tuned
+    wait-for (DESIGN.md §13/§15).
+
+    The construction-time guard pins the gather width to the INITIAL
+    operating point; once executors re-plan, a controller retune that
+    raises wait_for past ``wshard.resolved_width`` would silently
+    truncate survivors the round paid latency for.  Both schedulers call
+    this on every ``ControlDecision`` — raising beats clamping here,
+    because a clamped operating point would silently decode below the
+    redundancy the controller believes it provisioned.
+    """
+    wshard = getattr(executor, "wshard", None)
+    coding = getattr(executor, "coding", None)
+    if wshard is None or coding is None:
+        return
+    width = wshard.resolved_width(coding)
+    if width < wait_for:
+        raise ValueError(
+            f"retuned wait_for {wait_for} exceeds the worker-shard gather "
+            f"width {width}: survivor-only decode would drop responses "
+            f"the round waited for — construct the executor with "
+            f"WorkerShardConfig(gather_width={wait_for}) (or cap the "
+            f"controller's operating points)")
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Knobs of the serving runtime.
@@ -206,8 +232,10 @@ class SchedulerConfig:
     quarantine: Optional[QuarantineConfig] = None
     # -- production-traffic realism + closed-loop redundancy (§12) --
     # Adaptive (N, E, wait_for) retuning between batches; requires an
-    # executor that can re-plan per batch (EngineExecutor).  Per-worker
-    # state (reputation, adversary, churn) is sized to the controller's
+    # executor that can re-plan per batch (EngineExecutor, or
+    # CodedLLMExecutor constructed at controller.max_scheme — the jitted
+    # masked max-width path, DESIGN.md §15).  Per-worker state
+    # (reputation, adversary, churn) is sized to the controller's
     # MAXIMUM operating point; narrower batches dispatch to a prefix.
     controller: Optional[RedundancyController] = None
     # Worker churn (leave/rejoin on the event clock); a churned-out
@@ -314,7 +342,8 @@ class EngineExecutor:
         return scheme.forward(self.predict_fn, coded)
 
     def step(self, handle, round_idx: int, mask: np.ndarray,
-             attack: Optional[RoundAttack] = None):
+             attack: Optional[RoundAttack] = None,
+             locate_quorum: Optional[int] = None):
         raise RuntimeError("single-round executor has no step()")
 
     def decode(self, handle, mask: np.ndarray,
@@ -359,6 +388,28 @@ class CodedLLMExecutor:
     place (DESIGN.md §11) — so a handle's previous state is consumed by
     ``step``/``decode`` and must not be reused.
 
+    Adaptive redundancy (DESIGN.md §15): the executor re-plans per batch
+    without retracing.  Construct it at the controller's MAXIMUM
+    operating point (``controller.max_scheme``); ``dispatch`` pins the
+    batch's operating point into the handle, and each round composes a
+    per-stream **live mask** (first ``point.num_workers`` streams of the
+    max grid) into the straggler mask, so a narrower (N, E) masks off
+    coded streams in-program — the decode interpolates through the
+    survivors of the max Chebyshev grid exactly as it does for
+    stragglers.  ``locate_quorum`` rides along as a per-round traced
+    argument (degraded rounds lower it).  Byzantine args are normalized
+    to zero-mask/zero-sigma arrays on clean rounds (``x + 0*noise`` is
+    additive, so outputs are unchanged) so the pytree structure never
+    flips: the whole run stays at ONE prefill + ONE decode trace
+    (``byz_collude`` remains the one static — a colluding adversary's
+    first attack round costs a second trace pair).
+
+    Alternatively pass ``operating_points=[(s, e), ...]`` to pre-declare
+    a small set the controller may switch between: each point lazily
+    traces its OWN exact-width program pair on first dispatch, so the
+    compile count is bounded by the number of points actually visited
+    (pinned by the ``CODED_*_TRACES`` counters) and no masking runs.
+
     Note: partial (deadline-flushed) batches change the jitted batch
     shape and recompile.  This run-to-completion executor is kept as the
     batch-scoped baseline; the continuous slot-pool path
@@ -367,13 +418,15 @@ class CodedLLMExecutor:
     """
 
     supports_speculation = False
+    # the scheduler may pass a per-batch ``scheme`` (an operating point
+    # no wider than the traced program) and a per-round ``locate_quorum``
+    supports_replan = True
 
     def __init__(self, model_cfg, coding, params, steps: int,
                  max_len: int, seed: int = 0,
-                 sample: Optional[SampleConfig] = None, wshard=None):
+                 sample: Optional[SampleConfig] = None, wshard=None,
+                 operating_points=None):
         from repro.core.scheme import BerrutScheme
-        from repro.serving.coded_serving import (coded_decode_step,
-                                                 coded_prefill)
         self.scheme = as_scheme(coding)
         if not isinstance(self.scheme, BerrutScheme):
             raise TypeError("CodedLLMExecutor drives the jitted Berrut "
@@ -388,40 +441,106 @@ class CodedLLMExecutor:
         # by the jitted steps like ``coding`` — same donation and
         # compile-count contracts, worker-major stream layout inside
         self.wshard = wshard
+        self._model_cfg = model_cfg
+        self._max_len = max_len
         self._key = jax.random.PRNGKey(seed)
-        sample_cfg = self.sample
-        self._prefill = jax.jit(
-            lambda p, t, m, bm, br, bs, sr, collude: coded_prefill(
-                model_cfg, coding, p, {"tokens": t}, max_len=max_len,
+        if operating_points is not None:
+            self.operating_points = tuple(
+                (int(s), int(e)) for s, e in operating_points)
+            self._programs: Dict[Tuple[int, int], tuple] = {}
+            self.max_replan_workers = max(
+                self.scheme.with_redundancy(s=s, e=e).num_workers
+                for s, e in self.operating_points)
+        else:
+            # masked max-width: ONE program pair at this executor's coding
+            self.operating_points = None
+            self._prefill, self._decode = self._build_programs(coding)
+            self.max_replan_workers = coding.num_workers
+
+    def _build_programs(self, coding: CodingConfig) -> tuple:
+        """(prefill, decode) jit pair at ``coding``'s stream width, with
+        the live mask and locate quorum as traced per-round arguments."""
+        from repro.serving.coded_serving import (coded_decode_step,
+                                                 coded_prefill)
+        cfg, max_len = self._model_cfg, self._max_len
+        sample_cfg, wshard = self.sample, self.wshard
+        prefill = jax.jit(
+            lambda p, t, m, bm, br, bs, sr, live, lq, collude:
+            coded_prefill(
+                cfg, coding, p, {"tokens": t}, max_len=max_len,
                 straggler_mask=m, byz_mask=bm, byz_rng=br, byz_sigma=bs,
                 byz_collude=collude, with_report=True,
-                sample=sample_cfg, sample_rng=sr, wshard=wshard),
-            static_argnums=(7,))
-        self._decode = jax.jit(
-            lambda p, st, t, m, bm, br, bs, sr, collude: coded_decode_step(
-                model_cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm,
+                sample=sample_cfg, sample_rng=sr, wshard=wshard,
+                live_mask=live, locate_quorum=lq),
+            static_argnums=(9,))
+        decode = jax.jit(
+            lambda p, st, t, m, bm, br, bs, sr, live, lq, collude:
+            coded_decode_step(
+                cfg, coding, p, st, t, straggler_mask=m, byz_mask=bm,
                 byz_rng=br, byz_sigma=bs, byz_collude=collude,
                 with_report=True, sample=sample_cfg, sample_rng=sr,
-                wshard=wshard),
-            static_argnums=(8,), donate_argnums=(1,))
+                wshard=wshard, live_mask=live, locate_quorum=lq),
+            static_argnums=(10,), donate_argnums=(1,))
+        return prefill, decode
 
-    @staticmethod
-    def _byz_args(attack: Optional[RoundAttack]):
+    def _point_programs(self, point) -> tuple:
+        """(prefill, decode, program coding) for one operating point."""
+        if self.operating_points is None:
+            return self._prefill, self._decode, self.coding
+        key = (point.s, point.e)
+        if key not in self._programs:
+            self._programs[key] = self._build_programs(point.coding)
+        return (*self._programs[key], point.coding)
+
+    def _validate_point(self, point) -> None:
+        from repro.core.scheme import BerrutScheme
+        if not isinstance(point, BerrutScheme):
+            raise TypeError("CodedLLMExecutor operating points must be "
+                            f"Berrut schemes, got {point.name!r}")
+        if point.k != self.scheme.k:
+            raise ValueError(f"operating point K={point.k} does not match "
+                             f"the executor's K={self.scheme.k}")
+        if self.operating_points is not None:
+            if (point.s, point.e) not in self.operating_points:
+                raise ValueError(
+                    f"operating point (s={point.s}, e={point.e}) is not "
+                    f"in the pre-traced set {self.operating_points}")
+        elif point.num_workers > self.coding.num_workers:
+            raise ValueError(
+                f"operating point needs {point.num_workers} coded streams "
+                f"but the masked max-width program traces "
+                f"{self.coding.num_workers}: construct the executor at "
+                f"the controller's maximum point (controller.max_scheme)")
+
+    def _byz_args(self, attack: Optional[RoundAttack], full: int,
+                  width: int):
+        """Constant-structure Byzantine args padded to the program width:
+        a clean round is a zero-mask, zero-sigma attack, NOT a ``None``
+        (whose different pytree structure would force a recompile)."""
         if attack is None or not attack.active:
-            return None, None, 0.0, False
-        return (jnp.asarray(attack.mask), attack.key,
+            return (jnp.zeros((full,), jnp.float32), jax.random.PRNGKey(0),
+                    jnp.asarray(0.0, jnp.float32), False)
+        bm = np.zeros((full,), np.float32)
+        bm[:width] = np.asarray(attack.mask, np.float32)[:width]
+        return (jnp.asarray(bm), attack.key,
                 jnp.asarray(attack.sigma, jnp.float32), attack.collude)
 
     def _next_rng(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def dispatch(self, queries) -> dict:
+    def dispatch(self, queries, scheme=None) -> dict:
+        # the batch's operating point is pinned at dispatch (the
+        # controller retunes BETWEEN batches, never under one)
+        point = self.scheme if scheme is None else as_scheme(scheme)
+        self._validate_point(point)
         return {"tokens": jnp.asarray(queries, jnp.int32),
-                "state": None, "next": None, "outs": [], "round": 0}
+                "state": None, "next": None, "outs": [], "round": 0,
+                "scheme": point}
 
     def _round(self, handle, round_idx: int, mask: np.ndarray,
-               attack: Optional[RoundAttack]):
+               attack: Optional[RoundAttack],
+               locate_quorum: Optional[int] = None):
         # Round accounting: every round of a batch must run exactly once,
         # in order — ``decode`` issuing round ``rounds - 1`` regardless of
         # how many ``step`` rounds actually ran would silently double-run
@@ -431,38 +550,65 @@ class CodedLLMExecutor:
                 f"round accounting violated: expected round "
                 f"{handle['round']}, got {round_idx} (of {self.rounds})")
         handle["round"] = round_idx + 1
-        m = jnp.asarray(mask, jnp.float32)
-        bm, br, bs, collude = self._byz_args(attack)
+        point = handle["scheme"]
+        prefill, decode, coding = self._point_programs(point)
+        width, full = point.num_workers, coding.num_workers
+        mask = np.asarray(mask, np.float32)
+        if mask.shape[0] != width:
+            raise ValueError(
+                f"round mask covers {mask.shape[0]} workers but the "
+                f"batch's operating point dispatches {width}")
+        # the operating point's streams are a prefix of the program's
+        # grid; beyond-width streams are held out via the live mask and
+        # the decode interpolates through the survivors (DESIGN.md §15)
+        m = np.zeros((full,), np.float32)
+        m[:width] = mask
+        live = (np.arange(full) < width).astype(np.float32)
+        lq = jnp.asarray(0 if locate_quorum is None else locate_quorum,
+                         jnp.int32)
+        bm, br, bs, collude = self._byz_args(attack, full, width)
         if round_idx == 0:
-            toks, state, report = self._prefill(
-                self.params, handle["tokens"], m, bm, br, bs,
-                self._next_rng(), collude)
+            toks, state, report = prefill(
+                self.params, handle["tokens"], jnp.asarray(m), bm, br, bs,
+                self._next_rng(), jnp.asarray(live), lq, collude)
         else:
             # handle["state"] is donated to the step: the caches update
             # in place and the old state object is consumed here
-            toks, state, report = self._decode(
-                self.params, handle["state"], handle["next"], m, bm, br,
-                bs, self._next_rng(), collude)
+            toks, state, report = decode(
+                self.params, handle["state"], handle["next"],
+                jnp.asarray(m), bm, br, bs, self._next_rng(),
+                jnp.asarray(live), lq, collude)
         handle["next"], handle["state"] = toks[:, None], state
         handle["outs"].append(np.asarray(toks))
-        if self.coding.e > 0:
+        if coding.e > 0:
+            # verdicts are sliced to the operating point's width: the
+            # scheduler's masks/attacks (and its reputation prefix) are
+            # keyed on the dispatched pool, not the traced grid
             located, votes = report
+            located = np.asarray(located)[:, :width]
             g = located.shape[0]
             rep = LocateReport(
-                located=np.asarray(located), votes=np.asarray(votes),
-                masks=np.broadcast_to(mask, (g, len(mask)))
-                * (1.0 - np.asarray(located, np.float32)))
+                located=located, votes=np.asarray(votes)[:, :width],
+                masks=np.broadcast_to(mask, (g, width))
+                * (1.0 - located.astype(np.float32)))
         else:
             rep = None
         return handle, rep
 
     def step(self, handle, round_idx: int, mask: np.ndarray,
-             attack: Optional[RoundAttack] = None):
-        return self._round(handle, round_idx, mask, attack)
+             attack: Optional[RoundAttack] = None,
+             locate_quorum: Optional[int] = None):
+        return self._round(handle, round_idx, mask, attack, locate_quorum)
 
     def decode(self, handle, mask: np.ndarray,
-               attack: Optional[RoundAttack] = None):
-        handle, rep = self._round(handle, self.rounds - 1, mask, attack)
+               attack: Optional[RoundAttack] = None, scheme=None,
+               locate_quorum: Optional[int] = None):
+        if scheme is not None and \
+                as_scheme(scheme).config != handle["scheme"].config:
+            raise ValueError("decode scheme does not match the operating "
+                             "point pinned at dispatch")
+        handle, rep = self._round(handle, self.rounds - 1, mask, attack,
+                                  locate_quorum)
         outs = np.stack(handle["outs"], axis=1)           # (B, rounds)
         # the full batch emits exactly 1 + steps token columns: one per
         # coded round (prefill + each decode step), none double-counted
@@ -508,8 +654,11 @@ class CodedScheduler:
         if wshard is not None and isinstance(executor, CodedLLMExecutor):
             # survivor-only decode keeps a static gather width; a round
             # that waits for MORE responses than that would silently
-            # truncate survivors it paid latency for (DESIGN.md §13)
-            bound = max(config.wait_for or scheme.decode_quorum,
+            # truncate survivors it paid latency for (DESIGN.md §13).
+            # ``is None`` (not truthiness) so an explicit override flows
+            # through exactly as in ContinuousScheduler.
+            bound = max(scheme.decode_quorum if config.wait_for is None
+                        else config.wait_for,
                         scheme.decode_quorum)
             width = wshard.resolved_width(executor.coding)
             if width < bound:
@@ -523,8 +672,8 @@ class CodedScheduler:
             if not getattr(executor, "supports_replan", False):
                 raise ValueError(
                     "adaptive redundancy needs an executor that re-plans "
-                    "per batch (EngineExecutor); "
-                    f"{type(executor).__name__} cannot")
+                    "per batch (EngineExecutor, CodedLLMExecutor, or the "
+                    f"continuous pool); {type(executor).__name__} cannot")
             base = self.controller.base
             if base.name != scheme.name or base.k != scheme.k:
                 raise ValueError(
@@ -533,6 +682,15 @@ class CodedScheduler:
             if config.wait_for is not None:
                 raise ValueError("wait_for is controller-managed under "
                                  "adaptive redundancy")
+            max_w = getattr(executor, "max_replan_workers", None)
+            if max_w is not None and \
+                    self.controller.pool.num_workers > max_w:
+                raise ValueError(
+                    f"the controller's maximum operating point dispatches "
+                    f"{self.controller.pool.num_workers} workers but the "
+                    f"executor's traced programs cover {max_w}: construct "
+                    f"the executor at controller.max_scheme (or declare "
+                    f"matching operating_points)")
         # per-worker state (reputation / adversary / churn / latency
         # draws) is sized to the widest pool the run can dispatch to
         pool = self.controller.pool if self.controller is not None \
@@ -724,16 +882,36 @@ class CodedScheduler:
         self.trace.append(("spec", batch.bid, t,
                            tuple(np.flatnonzero(landed).tolist())))
         attack = batch.round_attacks[-1]
-        if getattr(self.executor, "supports_replan", False):
-            batch.spec_outputs, _ = self.executor.decode(
-                batch.handle, landed, attack=attack, scheme=batch.scheme)
-        else:
-            batch.spec_outputs, _ = self.executor.decode(
-                batch.handle, landed, attack=attack)
+        batch.spec_outputs, _ = self._exec_decode(batch, landed, attack)
         self.metrics.speculative_decodes += 1
         for slot, req in enumerate(batch.plan.requests):
             if batch.plan.valid[slot]:
                 self.spec_results[req.uid] = batch.spec_outputs[slot]
+
+    def _exec_step(self, batch: InflightBatch, round_idx: int,
+                   mask: np.ndarray, attack: Optional[RoundAttack]):
+        """The ONE step call shape: re-plannable executors additionally
+        get the round's locate quorum; static executors keep the legacy
+        signature (so third-party executors don't break)."""
+        if getattr(self.executor, "supports_replan", False):
+            return self.executor.step(
+                batch.handle, round_idx, mask, attack=attack,
+                locate_quorum=batch.round_quorums[round_idx])
+        return self.executor.step(batch.handle, round_idx, mask,
+                                  attack=attack)
+
+    def _exec_decode(self, batch: InflightBatch, mask: np.ndarray,
+                     attack: Optional[RoundAttack],
+                     locate_quorum: Optional[int] = None):
+        """The ONE decode call shape (speculative and final decodes):
+        re-plannable executors get the batch's pinned operating point and
+        the round's locate quorum (``None`` on speculative decodes, which
+        run below the quorum by design)."""
+        if getattr(self.executor, "supports_replan", False):
+            return self.executor.decode(
+                batch.handle, mask, attack=attack, scheme=batch.scheme,
+                locate_quorum=locate_quorum)
+        return self.executor.decode(batch.handle, mask, attack=attack)
 
     def _on_round(self, t: float, batch: InflightBatch,
                   round_idx: int) -> None:
@@ -743,21 +921,16 @@ class CodedScheduler:
         self.trace.append(("round", batch.bid, round_idx, t,
                            tuple(np.flatnonzero(mask).tolist())))
         if round_idx < rounds - 1:
-            batch.handle, report = self.executor.step(batch.handle,
-                                                      round_idx, mask,
-                                                      attack=attack)
+            batch.handle, report = self._exec_step(batch, round_idx, mask,
+                                                   attack)
             batch.round_reports.append(report)
             self._observe(t, mask, attack, report)
             self._control(t, batch, round_idx, report)
             self._start_round(batch, t, round_idx + 1)
             return
-        if getattr(self.executor, "supports_replan", False):
-            batch.outputs, report = self.executor.decode(
-                batch.handle, mask, attack=attack, scheme=batch.scheme,
-                locate_quorum=batch.round_quorums[round_idx])
-        else:
-            batch.outputs, report = self.executor.decode(
-                batch.handle, mask, attack=attack)
+        batch.outputs, report = self._exec_decode(
+            batch, mask, attack,
+            locate_quorum=batch.round_quorums[round_idx])
         batch.round_reports.append(report)
         self._observe(t, mask, attack, report)
         self._control(t, batch, round_idx, report)
@@ -822,6 +995,7 @@ class CodedScheduler:
         self.metrics.control_decisions += \
             len(self.controller.decisions) - before
         if decision is not None:
+            check_gather_bound(self.executor, decision.wait_for)
             self.trace.append(("retune", t, decision.num_workers,
                                decision.e, decision.wait_for))
 

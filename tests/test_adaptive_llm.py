@@ -1,0 +1,490 @@
+"""Adaptive redundancy over the jitted LLM paths (DESIGN.md §15).
+
+The tentpole acceptance bar: a ``RedundancyController`` drives BOTH
+jitted LLM executors without ever retracing — ``CodedLLMExecutor``
+(masked max-width program: one prefill + one decode trace across every
+retune) and ``ContinuousLLMExecutor`` (the slot pool keeps its
+two-traces-per-run contract under retunes, churn, and a persistent
+adversary).  The operating-point mode bounds compiles by the number of
+declared points instead.  Satellites ride along: the wshard gather
+bound is re-validated on every ``ControlDecision`` (raise, not clamp),
+the explicit-``wait_for`` construction bound is ``is None``-unified
+across both schedulers, the one executor-decode call shape keeps
+static third-party executors on the legacy signature, and
+``allowed_points`` snapping breaks ties toward more redundancy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.scheme import get_scheme
+from repro.launch.worker_mesh import WorkerShardConfig
+from repro.models import decode_step, init_caches, init_params, prefill
+from repro.serving import coded_serving
+from repro.serving.continuous import (ContinuousConfig,
+                                      ContinuousLLMExecutor,
+                                      ContinuousScheduler)
+from repro.serving.controller import (ControllerConfig,
+                                      RedundancyController)
+from repro.serving.failures import AdversaryConfig
+from repro.serving.latency import ChurnModel, LatencyModel
+from repro.serving.quarantine import QuarantineConfig
+from repro.serving.scheduler import (CodedLLMExecutor, CodedScheduler,
+                                     EngineExecutor, SchedulerConfig,
+                                     check_gather_bound, poisson_arrivals)
+
+K = 2
+PROMPT_LEN = 8
+STEPS = 3                      # legacy batches: 1 + STEPS coded rounds
+MAX_STEPS = 5                  # continuous per-request budget ceiling
+# heavy tails + a low straggle threshold: every decision window sees a
+# straggler rate far above grow_s_above, so the controller provably
+# retunes within the first window — the tests need a retune, not luck
+TAILS = dict(tail_prob=0.5)
+STRAGGLE_MS = 20.0
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, (PROMPT_LEN,)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _trace_deltas():
+    return (coded_serving.CODED_PREFILL_TRACES,
+            coded_serving.CODED_DECODE_STEP_TRACES)
+
+
+def _controller(s=0, e=1, s_max=2, e_max=1, window_rounds=4,
+                allowed_points=None):
+    return RedundancyController(
+        get_scheme("berrut", K, s=s, e=e),
+        ControllerConfig(window_rounds=window_rounds, s_min=0, s_max=s_max,
+                         e_min=0, e_max=e_max, straggle_ms=STRAGGLE_MS,
+                         allowed_points=allowed_points))
+
+
+# -- tentpole: legacy scheduler, masked max-width program ----------------
+
+
+def _legacy_adaptive(model, seed=0, n=16, operating_points=None):
+    """CodedScheduler + CodedLLMExecutor at controller.max_scheme with a
+    persistent (non-colluding) adversary; full batches only (n is a
+    multiple of K, no flush deadline) so the batch shape never changes."""
+    cfg, params = model
+    if operating_points is None:
+        ctrl = _controller(s=0, e=1)
+    else:
+        pts = tuple(operating_points)
+        s_max = max(s for s, _ in pts)
+        e_max = max(e for _, e in pts)
+        ctrl = _controller(s=0, e=0, s_max=s_max, e_max=e_max,
+                           allowed_points=pts)
+    executor = CodedLLMExecutor(
+        cfg, ctrl.max_scheme.coding, params, steps=STEPS,
+        max_len=PROMPT_LEN + STEPS + 2, seed=0,
+        operating_points=operating_points)
+    adversary = (AdversaryConfig(kind="persistent", sigma=80.0, seed=3)
+                 if ctrl.max_scheme.e > 0 else None)
+    sched = CodedScheduler(
+        SchedulerConfig(groups_per_batch=1, flush_deadline_ms=None,
+                        seed=seed, controller=ctrl, adversary=adversary,
+                        quarantine=QuarantineConfig() if adversary else None),
+        LatencyModel(**TAILS), executor)
+    pf0, dc0 = _trace_deltas()
+    # arrivals span several round-trip times (a coded round's trigger is
+    # tens of ms under these tails), so batches dispatched late in the
+    # run actually pick up the retuned operating point
+    metrics = sched.run(_prompts(cfg, n),
+                        poisson_arrivals(n, 20.0, seed=seed + 1))
+    pf1, dc1 = _trace_deltas()
+    return sched, ctrl, metrics, (pf1 - pf0, dc1 - dc0)
+
+
+class TestMaskedMaxWidth:
+    """The masked max-width program: retunes never retrace."""
+
+    @pytest.fixture(scope="class")
+    def served(self, model):
+        return _legacy_adaptive(model, seed=0)
+
+    def test_one_prefill_one_decode_trace_across_retunes(self, served):
+        sched, ctrl, metrics, traces = served
+        assert metrics.control_decisions >= 1, "the run never retuned"
+        widths = {b.dispatch_plan.num_workers for b in sched.batches}
+        assert len(widths) >= 2, "retunes never changed the pool width"
+        # the whole adaptive run — persistent adversary and every
+        # operating-point switch included — is ONE trace pair
+        assert traces == (1, 1)
+
+    def test_narrow_batches_dispatch_a_prefix_of_the_max_grid(self, served):
+        sched, ctrl, metrics, _ = served
+        full = ctrl.max_scheme.num_workers
+        for batch in sched.batches:
+            w = batch.scheme.num_workers
+            assert w <= full
+            for mask in batch.round_masks:
+                assert len(mask) == w
+        assert metrics.count == 16
+        assert min(b.scheme.num_workers for b in sched.batches) < full
+
+    def test_wider_point_than_the_traced_program_is_rejected(self, model):
+        cfg, params = model
+        lean = get_scheme("berrut", K, s=0, e=1)
+        executor = CodedLLMExecutor(cfg, lean.coding, params, steps=STEPS,
+                                    max_len=PROMPT_LEN + STEPS + 2)
+        with pytest.raises(ValueError, match="max_scheme"):
+            executor.dispatch(np.zeros((K, PROMPT_LEN), np.int32),
+                              scheme=get_scheme("berrut", K, s=2, e=1))
+
+    def test_scheduler_rejects_an_undersized_executor(self, model):
+        cfg, params = model
+        ctrl = _controller(s=0, e=1)          # max point: 8 workers
+        lean = get_scheme("berrut", K, s=0, e=1)   # traces only 6
+        executor = CodedLLMExecutor(cfg, lean.coding, params, steps=STEPS,
+                                    max_len=PROMPT_LEN + STEPS + 2)
+        with pytest.raises(ValueError, match="traced programs cover"):
+            CodedScheduler(SchedulerConfig(controller=ctrl),
+                           LatencyModel(), executor)
+
+
+class TestOperatingPoints:
+    """Pre-declared (s, e) set: compile count == points visited."""
+
+    def test_compile_count_bounded_by_points_visited(self, model):
+        points = ((0, 0), (1, 0))
+        sched, ctrl, metrics, traces = _legacy_adaptive(
+            model, seed=0, operating_points=points)
+        visited = {(b.scheme.s, b.scheme.e) for b in sched.batches}
+        assert metrics.control_decisions >= 1
+        assert visited == set(points)         # the retune actually moved
+        # one exact-width program pair per point visited, none for masks
+        assert traces == (len(visited), len(visited))
+        assert traces[0] <= len(points)
+
+    def test_point_outside_the_declared_set_is_rejected(self, model):
+        cfg, params = model
+        base = get_scheme("berrut", K, s=1, e=0)
+        executor = CodedLLMExecutor(
+            cfg, base.coding, params, steps=STEPS,
+            max_len=PROMPT_LEN + STEPS + 2, operating_points=((1, 0),))
+        with pytest.raises(ValueError, match="pre-traced set"):
+            executor.dispatch(np.zeros((K, PROMPT_LEN), np.int32),
+                              scheme=get_scheme("berrut", K, s=0, e=0))
+
+
+# -- tentpole: continuous slot pool under a controller -------------------
+
+
+def _continuous_run(model, adaptive, seed=0, n=15):
+    """One seeded continuous run with churn + a persistent adversary;
+    adaptive runs start LEAN (s=0, e=1) under a controller whose max
+    point matches the static-max run's coding (s=2, e=1)."""
+    cfg, params = model
+    ctrl = _controller(s=0, e=1) if adaptive else None
+    coding = (ctrl.max_scheme.coding if adaptive
+              else get_scheme("berrut", K, s=2, e=1).coding)
+    rng = np.random.RandomState(seed)
+    prompts = _prompts(cfg, n, seed=seed)
+    budgets = rng.randint(1, MAX_STEPS + 1, size=n)
+    arrivals = poisson_arrivals(n, 2500.0, seed=seed + 1)
+    executor = ContinuousLLMExecutor(
+        cfg, coding, params, pool_groups=2,
+        max_len=PROMPT_LEN + MAX_STEPS + 2)
+    sched = ContinuousScheduler(
+        ContinuousConfig(pool_groups=2, flush_deadline_ms=4.0, seed=seed,
+                         max_new_tokens=MAX_STEPS, controller=ctrl,
+                         adversary=AdversaryConfig(kind="persistent",
+                                                   sigma=80.0, seed=3),
+                         quarantine=QuarantineConfig(),
+                         churn=ChurnModel(mean_up_ms=200.0,
+                                          mean_down_ms=20.0, seed=5)),
+        LatencyModel(**TAILS), executor)
+    pf0, dc0 = _trace_deltas()
+    metrics = sched.run(prompts, arrivals, max_new_tokens=budgets)
+    pf1, dc1 = _trace_deltas()
+    return sched, ctrl, metrics, budgets, (pf1 - pf0, dc1 - dc0)
+
+
+def _uncoded_reference(cfg, params, prompts, steps):
+    """Greedy uncoded decode — the agreement yardstick both the static
+    and the adaptive coded runs are scored against."""
+    tokens = jnp.asarray(np.stack(prompts), jnp.int32)
+    caches = init_caches(cfg, tokens.shape[0],
+                         max_len=PROMPT_LEN + steps + 2)
+    logits, caches = prefill(cfg, params, {"tokens": tokens}, caches)
+    outs = [np.argmax(np.asarray(logits), -1)]
+    pos = tokens.shape[1]
+    for _ in range(steps - 1):
+        nxt = jnp.argmax(logits, -1)[:, None]
+        logits, caches = decode_step(cfg, params, caches, {"tokens": nxt},
+                                     jnp.asarray(pos, jnp.int32))
+        outs.append(np.argmax(np.asarray(logits), -1))
+        pos += 1
+    return np.stack(outs, axis=1)              # (n, steps)
+
+
+def _agreement(results, ref):
+    hits = total = 0
+    for uid, toks in results.items():
+        want = ref[uid][:len(toks)]
+        hits += int(np.sum(np.asarray(toks) == want))
+        total += len(toks)
+    return hits / total
+
+
+class TestContinuousAdaptive:
+    """The ISSUE acceptance run: seeded continuous serving with churn +
+    a persistent adversary retunes mid-run, stays at two traces, holds
+    agreement within 0.03 of static-max at a lower mean dispatch width,
+    and reproduces its event trace bit-for-bit."""
+
+    @pytest.fixture(scope="class")
+    def served(self, model):
+        a1 = _continuous_run(model, adaptive=True, seed=0)
+        a2 = _continuous_run(model, adaptive=True, seed=0)
+        static = _continuous_run(model, adaptive=False, seed=0)
+        return a1, a2, static
+
+    def test_retunes_at_least_once(self, served):
+        (sched, ctrl, metrics, _, _), _, _ = served
+        assert metrics.control_decisions >= 1
+        assert any(e[0] == "retune" for e in sched.trace)
+        assert len(ctrl.decision_log()) >= 2
+
+    def test_compile_counts_stay_pinned(self, served):
+        (_, _, _, _, t1), (_, _, _, _, t2), (_, _, _, _, ts) = served
+        # adaptive runs keep the pool's two-traces-per-run contract:
+        # retunes are masked in-program, never retraced
+        assert t1 == (1, 1)
+        assert t2 == (1, 1)
+        assert ts == (1, 1)
+
+    def test_lower_mean_dispatch_width_than_static_max(self, served):
+        (sched, ctrl, _, _, _), _, (stat, _, _, _, _) = served
+        full = ctrl.max_scheme.num_workers
+        assert set(stat.round_widths) == {full}
+        assert len(set(sched.round_widths)) >= 2   # it actually moved
+        assert np.mean(sched.round_widths) < full
+
+    def test_agreement_within_3_points_of_static_max(self, served, model):
+        cfg, params = model
+        (sched, _, _, budgets, _), _, (stat, _, _, _, _) = served
+        prompts = _prompts(cfg, 15, seed=0)
+        ref = _uncoded_reference(cfg, params, prompts, MAX_STEPS)
+        agree_adaptive = _agreement(sched.results, ref)
+        agree_static = _agreement(stat.results, ref)
+        assert sorted(sched.results) == sorted(stat.results)
+        assert agree_adaptive >= agree_static - 0.03, (
+            f"adaptive agreement {agree_adaptive:.3f} fell more than 0.03 "
+            f"below static-max {agree_static:.3f}")
+
+    def test_golden_trace_bit_reproducible(self, served):
+        (s1, c1, m1, _, _), (s2, c2, m2, _, _), _ = served
+        assert s1.trace == s2.trace
+        assert c1.decision_log() == c2.decision_log()
+        assert m1.summary() == m2.summary()
+        assert sorted(s1.results) == sorted(s2.results)
+        for uid in s1.results:
+            np.testing.assert_array_equal(s1.results[uid], s2.results[uid])
+
+    def test_churn_and_adversary_were_actually_exercised(self, served):
+        (sched, _, metrics, _, _), _, _ = served
+        assert metrics.churn_leaves >= 1, "churn never fired"
+        assert metrics.rounds >= 8
+
+
+# -- satellites: wshard gather bound ------------------------------------
+
+
+RNG = np.random.RandomState(0)
+W_OUT = RNG.randn(3, 2)
+
+
+def _predict(x):
+    return np.asarray(x) @ W_OUT
+
+
+class TestGatherBound:
+    """check_gather_bound: raise (never clamp) on every ControlDecision
+    whose wait_for exceeds the survivor-only gather width."""
+
+    class _Sharded:
+        def __init__(self, width, coding):
+            self.wshard = WorkerShardConfig(gather_width=width)
+            self.coding = coding
+
+    def test_raises_past_the_gather_width(self):
+        coding = get_scheme("berrut", K, s=2, e=1).coding   # 8 workers
+        ex = self._Sharded(5, coding)
+        check_gather_bound(ex, 5)              # at the width: fine
+        with pytest.raises(ValueError, match="gather"):
+            check_gather_bound(ex, 6)
+
+    def test_noop_without_a_wshard(self):
+        scheme = get_scheme("berrut", K, s=1, e=0)
+        check_gather_bound(EngineExecutor(_predict, scheme), 99)
+
+    def test_legacy_scheduler_revalidates_at_retune_time(self):
+        """EngineExecutor + a narrow wshard passes construction (its
+        initial wait-for fits) but the controller's first grow pushes
+        wait_for past the gather width -> the retune raises."""
+        ctrl = _controller(s=0, e=1, s_max=1, e_max=1, window_rounds=2)
+        executor = EngineExecutor(
+            _predict, ctrl.max_scheme,
+            wshard=WorkerShardConfig(gather_width=3))
+        sched = CodedScheduler(
+            SchedulerConfig(groups_per_batch=1, flush_deadline_ms=None,
+                            seed=0, controller=ctrl),
+            LatencyModel(**TAILS), executor)
+        payloads = [np.random.RandomState(i).randn(3) for i in range(16)]
+        # every e=1 point waits for the K+2E locator quorum (4), past the
+        # gather width (3): the first retune must raise, not clamp
+        with pytest.raises(ValueError, match="gather"):
+            sched.run(payloads, poisson_arrivals(16, 3000.0, seed=1))
+
+    def test_continuous_scheduler_revalidates_at_retune_time(self, model):
+        cfg, params = model
+        ctrl = _controller(s=0, e=1, window_rounds=2)
+        executor = ContinuousLLMExecutor(
+            cfg, ctrl.max_scheme.coding, params, pool_groups=2,
+            max_len=PROMPT_LEN + MAX_STEPS + 2)
+        sched = ContinuousScheduler(
+            ContinuousConfig(pool_groups=2, flush_deadline_ms=4.0, seed=0,
+                             max_new_tokens=MAX_STEPS, controller=ctrl),
+            LatencyModel(**TAILS), executor)
+        # the gather width shrinks under the run (an operator re-shards
+        # mid-deployment): the next ControlDecision must catch it
+        executor.wshard = WorkerShardConfig(gather_width=3)
+        prompts = _prompts(cfg, 8, seed=0)
+        with pytest.raises(ValueError, match="gather"):
+            sched.run(prompts, poisson_arrivals(8, 2500.0, seed=1))
+
+
+class TestExplicitWaitForBound:
+    """Satellite 1: both schedulers derive the construction-time gather
+    bound from ``wait_for is None`` — an explicit override flows through
+    identically (scheduler.py previously tested truthiness)."""
+
+    def _coded(self, model, wait_for, gather_width):
+        cfg, params = model
+        scheme = get_scheme("berrut", K, s=2, e=1)         # quorum 4 of 8
+        executor = CodedLLMExecutor(
+            cfg, scheme.coding, params, steps=STEPS,
+            max_len=PROMPT_LEN + STEPS + 2,
+            wshard=WorkerShardConfig(gather_width=gather_width))
+        return CodedScheduler(
+            SchedulerConfig(scheme=scheme, wait_for=wait_for, seed=0),
+            LatencyModel(), executor)
+
+    def _continuous(self, model, wait_for, gather_width):
+        cfg, params = model
+        scheme = get_scheme("berrut", K, s=2, e=1)
+        executor = ContinuousLLMExecutor(
+            cfg, scheme.coding, params, pool_groups=2,
+            max_len=PROMPT_LEN + MAX_STEPS + 2,
+            wshard=WorkerShardConfig(gather_width=gather_width))
+        return ContinuousScheduler(
+            ContinuousConfig(pool_groups=2, wait_for=wait_for, seed=0),
+            LatencyModel(), executor)
+
+    @pytest.mark.parametrize("ctor", ["_coded", "_continuous"])
+    def test_explicit_wait_for_raises_identically(self, model, ctor):
+        build = getattr(self, ctor)
+        build(model, wait_for=None, gather_width=4)   # quorum bound: ok
+        build(model, wait_for=5, gather_width=5)      # override at width
+        with pytest.raises(ValueError, match="gather width"):
+            build(model, wait_for=6, gather_width=5)  # override past it
+
+
+# -- satellite: the one executor-decode call shape -----------------------
+
+
+class TestLegacyExecutorSignature:
+    """Static third-party executors keep the pre-replan call shape: the
+    scheduler must not pass ``scheme``/``locate_quorum`` to an executor
+    that does not declare ``supports_replan``."""
+
+    def test_static_executor_never_sees_replan_kwargs(self):
+        scheme = get_scheme("berrut", K, s=1, e=0)
+
+        class LegacyExec(EngineExecutor):
+            supports_replan = False
+
+            def step(self, handle, round_idx, mask, attack=None):
+                raise RuntimeError("single-round executor has no step()")
+
+            def decode(self, handle, mask, attack=None):
+                # no scheme=/locate_quorum= parameters: a replan kwarg
+                # leaking through would TypeError here
+                return EngineExecutor.decode(self, handle, mask, attack)
+
+        sched = CodedScheduler(
+            SchedulerConfig(scheme=scheme, groups_per_batch=1, seed=0),
+            LatencyModel(), LegacyExec(_predict, scheme))
+        payloads = [np.random.RandomState(i).randn(3) for i in range(8)]
+        metrics = sched.run(payloads, poisson_arrivals(8, 2000.0, seed=1))
+        assert metrics.count == 8
+
+
+# -- satellite: allowed_points snapping ----------------------------------
+
+
+class TestAllowedPointSnapping:
+    def test_initial_point_snaps_into_the_set(self):
+        ctrl = _controller(s=1, e=0, s_max=2, e_max=1,
+                           allowed_points=((0, 0), (2, 1)))
+        # (1, 0) is L1-1 from (0, 0) and L1-2 from (2, 1): nearest wins
+        assert (ctrl.scheme.s, ctrl.scheme.e) == (0, 0)
+
+    def test_initial_point_in_the_set_is_identity(self):
+        ctrl = _controller(s=2, e=1, s_max=2, e_max=1,
+                           allowed_points=((0, 0), (2, 1)))
+        assert (ctrl.scheme.s, ctrl.scheme.e) == (2, 1)
+
+    def test_ties_break_toward_more_redundancy(self):
+        # (1, 1) is L1-2 from both corners: never under-provision on a
+        # coin flip — snap to the wider (2, 2)
+        ctrl = _controller(s=1, e=1, s_max=2, e_max=2,
+                           allowed_points=((0, 0), (2, 2)))
+        assert (ctrl.scheme.s, ctrl.scheme.e) == (2, 2)
+
+    def test_decisions_snap_too(self):
+        ctrl = _controller(s=0, e=0, s_max=2, e_max=0,
+                           window_rounds=1, allowed_points=((0, 0), (2, 0)))
+        n = ctrl.scheme.num_workers
+        times = np.full((n,), 500.0)          # every worker straggles
+        decision = ctrl.observe_round(0.0, times, 500.0)
+        # the policy wanted s=1; the snap lands on (2, 0), tie toward
+        # more redundancy
+        assert decision is not None
+        assert (decision.s, decision.e) == (2, 0)
+        assert ctrl.scheme.s == 2
+
+    def test_max_scheme_is_the_widest_declared_point(self):
+        ctrl = _controller(s=0, e=0, s_max=2, e_max=1,
+                           allowed_points=((2, 0), (0, 1)))
+        # (0, 1) spans 2(K+E)+S = 6 workers; (2, 0) only K+S = 4
+        assert (ctrl.max_scheme.s, ctrl.max_scheme.e) == (0, 1)
+        assert ctrl.pool.num_workers == ctrl.max_scheme.num_workers
+        assert ctrl.pool.e == 1
+
+    def test_points_outside_the_box_are_rejected(self):
+        with pytest.raises(ValueError, match="outside"):
+            ControllerConfig(s_max=1, allowed_points=((0, 0), (2, 0)))
+        with pytest.raises(ValueError, match="non-empty"):
+            ControllerConfig(allowed_points=())
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

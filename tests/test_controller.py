@@ -214,7 +214,9 @@ class TestSchedulerIntegration:
             rounds = 1
             supports_speculation = False
             scheme = get_scheme("berrut", 4, s=1, e=1)
-        assert not getattr(CodedLLMExecutor, "supports_replan", False)
+        # the jitted LLM executors re-plan via masked max-width programs
+        # (DESIGN.md §15) — only genuinely static executors refuse
+        assert getattr(CodedLLMExecutor, "supports_replan", False)
         with pytest.raises(ValueError, match="re-plans"):
             CodedScheduler(
                 SchedulerConfig(scheme=scheme, controller=ctrl),

@@ -124,7 +124,9 @@ def decode_bytes(mode):
                  jnp.asarray(ones_p), jnp.asarray(mask),
                  jnp.zeros((coding.num_workers,), jnp.float32),
                  jax.random.PRNGKey(0), jnp.asarray(0.0, jnp.float32),
-                 jax.random.PRNGKey(1))
+                 jax.random.PRNGKey(1),
+                 jnp.ones((coding.num_workers,), jnp.float32),
+                 jnp.asarray(0, jnp.int32))
         text = ex._decode.lower(*largs).compile().as_text()
     return hlo_analysis.collective_bytes(text)
 

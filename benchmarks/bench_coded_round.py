@@ -13,7 +13,15 @@ instead of anecdotes:
     strided gather, Schur/Cholesky block locator, matrix-construction
     fused into the decode contraction), and the kernel's combined
     decode+gather ONE-PASS variant.
-  * ``encode`` — the Berrut encode contraction at embedding scale.
+  * ``encode`` — the Berrut encode contraction at embedding scale,
+    measured on the kernel path serving actually runs (encode matrix
+    cast to the activation dtype, ``ops``-dispatched), plus the fused
+    one-pass encode->dispatch kernel vs the two-pass encode +
+    swapaxes/reshape worker-major composition it replaces.
+  * ``pool_attn`` — the coded-pool decode-step attention: the pre-PR
+    masked path (materialise the (B, W) validity mask, full-width
+    scores) vs ``ops.pool_decode_attention`` (per-slot position vector
+    + live mask, tile validity derived in-kernel on the Pallas path).
   * ``round`` — end-to-end ``coded_pool_decode_step`` rounds on the
     reduced LLM with donated pool state + on-device sampling, plus the
     compiled program's memory analysis with and without donation (the
@@ -211,13 +219,68 @@ def _encode_cell(coding, g, d, iters, reps, emit):
 
     rng = np.random.RandomState(1)
     x = jnp.asarray(rng.randn(g, coding.k, d), jnp.float32)
-    w = berrut.encode_matrix(coding)
-    enc = jax.jit(lambda xx: ops.berrut_apply(w, xx))
+    w = jnp.asarray(berrut.encode_matrix(coding), jnp.float32)
+
+    # The exact program serving runs (_code_streams): encode matrix cast
+    # to the activation dtype, then the kernel-dispatched contraction —
+    # not a hand-rolled jnp lambda that skips the dispatch layer.
+    enc = jax.jit(lambda xx: ops.berrut_apply(w.astype(xx.dtype), xx))
+    # Worker-major dispatch, two ways: the pre-PR two-pass composition
+    # (encode, then a swapaxes/reshape pass over the coded block) vs the
+    # fused one-pass encode->dispatch kernel serving now runs.
+    unfused = jax.jit(lambda xx: jnp.swapaxes(
+        ops.berrut_apply(w.astype(xx.dtype), xx), 0, 1).reshape(-1, d))
+    fused = jax.jit(lambda xx: ops.berrut_encode_dispatch(
+        w.astype(xx.dtype), xx))
     us = _med_timed(enc, x, iters=iters, reps=reps)
+    unfused_us, fused_us = _paired_timed((unfused, fused), (x,),
+                                         iters=iters, reps=reps)
     emit(f"bench_coded_round/encode_k{coding.k}_n{coding.num_workers}",
-         us, f"groups={g};features={d}")
+         us, f"groups={g};features={d};"
+         f"fused_dispatch={fused_us:.0f}us;"
+         f"unfused_dispatch={unfused_us:.0f}us")
     return {"k": coding.k, "workers": coding.num_workers, "groups": g,
-            "features": d, "encode_us": us}
+            "features": d, "encode_us": us,
+            "encode_unfused_dispatch_us": unfused_us,
+            "encode_fused_us": fused_us,
+            "fused_dispatch_speedup": unfused_us / fused_us}
+
+
+def _pool_attn_cell(streams, heads, kv_heads, head_dim, width, iters,
+                    reps, emit):
+    """Coded-pool decode attention: pre-PR masked full-width path vs the
+    per-slot position-vector op (kernel-dispatched)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(streams, heads, head_dim), jnp.float32)
+    k = jnp.asarray(rng.randn(streams, width, kv_heads, head_dim),
+                    jnp.float32)
+    v = jnp.asarray(rng.randn(streams, width, kv_heads, head_dim),
+                    jnp.float32)
+    # Slot-pool shape: streams admitted at different rounds sit at very
+    # different depths; a fixed spread keeps the cell deterministic.
+    pos = jnp.asarray((np.arange(streams) * (width // max(streams, 1))
+                       + 1) % width, jnp.int32)
+
+    masked = jax.jit(lambda qq, kk, vv, pp: ops.decode_attention(
+        qq, kk, vv, jnp.arange(width)[None, :] <= pp[:, None]))
+    pool = jax.jit(lambda qq, kk, vv, pp: ops.pool_decode_attention(
+        qq, kk, vv, pp))
+    masked_us, pool_us = _paired_timed((masked, pool), (q, k, v, pos),
+                                       iters=iters, reps=reps)
+    key = f"b{streams}_h{heads}kv{kv_heads}_w{width}"
+    emit(f"bench_coded_round/pool_attn_{key}", pool_us,
+         f"masked={masked_us:.0f}us;"
+         f"speedup_vs_masked={masked_us / pool_us:.2f}x")
+    return key, {"streams": streams, "heads": heads,
+                 "kv_heads": kv_heads, "head_dim": head_dim,
+                 "width": width, "masked_us": masked_us,
+                 "pool_attn_us": pool_us,
+                 "speedup_vs_masked": masked_us / pool_us}
 
 
 def _mem_fields(ma):
@@ -317,6 +380,7 @@ def run(emit=None):
     if smoke:
         v, g, d = 2048, 2, 512
         tail_cfgs = [((4, 1, 1), "f32")]
+        pool_attn_cfgs = [(8, 8, 2, 64, 512)]
         pools = [2]
         iters, reps, rounds = 2, 3, 3
     else:
@@ -324,11 +388,12 @@ def run(emit=None):
         tail_cfgs = [((4, 1, 0), "f32"), ((4, 1, 1), "f32"),
                      ((8, 1, 1), "f32"), ((8, 1, 1), "bf16"),
                      ((8, 2, 2), "f32")]
+        pool_attn_cfgs = [(20, 16, 8, 128, 1024), (40, 16, 8, 128, 2048)]
         pools = [2, 4]
         iters, reps, rounds = 5, 7, 8
 
     out = {"smoke": smoke, "schema": 1, "tail": {}, "encode": [],
-           "round": {}}
+           "pool_attn": {}, "round": {}}
     for (k, s, e), dtype_name in tail_cfgs:
         coding = CodingConfig(k=k, s=s, e=e, c_vote=64)
         key, cell = _tail_cell(coding, g, v, dtype_name, iters, reps, emit)
@@ -336,6 +401,10 @@ def run(emit=None):
     for k, s in ((4, 1), (8, 1)) if not smoke else ((4, 1),):
         out["encode"].append(_encode_cell(CodingConfig(k=k, s=s), g, d,
                                           iters, reps, emit))
+    for streams, h, kv, hd, width in pool_attn_cfgs:
+        key, cell = _pool_attn_cell(streams, h, kv, hd, width, iters,
+                                    reps, emit)
+        out["pool_attn"][key] = cell
     for pool in pools:
         coding = CodingConfig(k=2, s=1, e=0)
         key, cell = _round_cell(coding, pool, prompt_len=8, rounds=rounds,

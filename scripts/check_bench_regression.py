@@ -21,7 +21,8 @@ import json
 import sys
 
 # Latency fields gated per cell: only the SHIPPED paths (the fused
-# tail, the encode contraction, the end-to-end round) plus the
+# tail, the encode contraction, the fused encode->dispatch kernel, the
+# coded-pool decode attention, the end-to-end round) plus the
 # event-clock serving tail from the adaptive-redundancy trajectory
 # (``p99_ms`` is simulated time off fixed seeds, so it is exactly
 # reproducible — a drift there is a real scheduler change, not CI
@@ -29,7 +30,8 @@ import sys
 # informational — absolute timings on shared boxes burst 2-3x
 # (EXPERIMENTS.md §9), so gating every raw field would make the job
 # flaky without guarding anything users run.
-_GATED = ("fused_us", "encode_us", "round_us", "p99_ms", "gathered_bytes")
+_GATED = ("fused_us", "encode_us", "encode_fused_us", "pool_attn_us",
+          "round_us", "p99_ms", "gathered_bytes")
 
 # Quality fields gated as FLOORS per cell (higher is better): the
 # scheme-faceoff agreement runs on an exact-seeded event clock, so it
@@ -43,7 +45,7 @@ def _cells(doc):
     # ``gathered_bytes`` come from compiled-HLO collective accounting —
     # deterministic, so CI gates them with a tight --max-ratio (a jump
     # means the survivor-only gather silently widened, not noise)
-    for section in ("tail", "round", "mesh"):
+    for section in ("tail", "pool_attn", "round", "mesh"):
         for key, cell in (doc.get(section) or {}).items():
             yield f"{section}.{key}", cell
     for cell in doc.get("encode") or []:

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: single-token decode attention over a long KV cache.
+"""Pallas TPU kernels: single-token decode attention over a long KV cache.
 
 The decode_32k / long_500k hot spot: one query row per stream against a
 32k-512k cache.  The cache length is the tiled (streamed) dimension; fp32
@@ -6,8 +6,17 @@ online-softmax state lives in VMEM scratch.  GQA: the grid iterates KV
 heads; the ``rep`` q-heads sharing each KV head ride the sublane dim so
 the (rep, KT) score matmul feeds the MXU.
 
-Masking is positional (``kv_mask``: live ring-buffer slots), matching
-ref.decode_attention_ref.
+Two variants:
+  * ``flash_decode`` — shared-depth decode with an explicit (B, W)
+    ``kv_mask`` of live ring-buffer slots, matching
+    ref.decode_attention_ref.
+  * ``pool_flash_decode`` — the continuous-batching slot pool
+    (DESIGN.md §10): per-stream ``(B,)`` ring positions and an optional
+    per-stream slot-live mask ride in as SMEM scalars and the validity
+    of every KV tile is derived IN-KERNEL (``kvpos <= pos``, composed
+    with ``live``), so the caller never materialises a (B, W) mask or
+    full-width masked scores.  Matches ref.pool_decode_attention_ref
+    bitwise.
 """
 
 from __future__ import annotations
@@ -113,4 +122,109 @@ def flash_decode(q, k_cache, v_cache, kv_mask, *, softcap=0.0,
         ],
         interpret=interpret,
     )(qg, kp, vp, mp)
+    return out.reshape(b, h, d)
+
+
+def _pool_kernel(pos_ref, live_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_scr, l_scr, acc_scr, *, softcap: float, scale: float,
+                 kv_scale: float, width: int):
+    wi = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (rep, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (KT, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (KT, D)
+    if kv_scale > 0.0:
+        k = k / kv_scale
+        v = v / kv_scale
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (rep, KT)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    # In-kernel validity: ring slots at depth <= this stream's pos (and
+    # below the unpadded width), AND'd with the stream's slot-live bit.
+    # Both scalars come from SMEM — no (B, W) mask ever hits HBM.
+    kvpos = wi * KV_TILE + jax.lax.broadcasted_iota(
+        jnp.int32, (1, KV_TILE), 1)                      # (1, KT)
+    live = jnp.logical_and(kvpos <= pos_ref[0, 0], kvpos < width)
+    live = jnp.logical_and(live, live_ref[0, 0] > 0)     # (1, KT)
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(live, p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(wi == nw - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "kv_scale",
+                                              "interpret"))
+def pool_flash_decode(q, k_cache, v_cache, pos, live=None, *, softcap=0.0,
+                      kv_scale=0.0, interpret=False):
+    """Slot-pool decode attention: q (B,H,D); caches (B,W,KV,D);
+    pos (B,) int32 per-stream ring positions; live (B,) optional
+    slot-live mask (None = all live).
+
+    A fully-dead row (live == 0) outputs zeros — its softmax
+    normaliser never accumulates.  ``kv_scale`` as in ``flash_decode``.
+    Matches ref.pool_decode_attention_ref bitwise.
+    """
+    b, h, d = q.shape
+    w, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    scale = 1.0 / (d ** 0.5)
+
+    pad_w = (-w) % KV_TILE
+    kp = jnp.pad(k_cache, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+    wp = w + pad_w
+    qg = q.reshape(b, kv, rep, d)
+    pos2 = jnp.asarray(pos, jnp.int32).reshape(b, 1)
+    if live is None:
+        live2 = jnp.ones((b, 1), jnp.int32)
+    else:
+        live2 = (live > 0).astype(jnp.int32).reshape(b, 1)
+
+    grid = (b, kv, wp // KV_TILE)
+    kernel = functools.partial(_pool_kernel, softcap=softcap, scale=scale,
+                               kv_scale=kv_scale, width=w)
+    smem_scalar = pl.BlockSpec((1, 1), lambda bi, gi, wi: (bi, 0),
+                               memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            smem_scalar,
+            smem_scalar,
+            pl.BlockSpec((1, 1, rep, d), lambda bi, gi, wi: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, KV_TILE, 1, d),
+                         lambda bi, gi, wi: (bi, wi, gi, 0)),
+            pl.BlockSpec((1, KV_TILE, 1, d),
+                         lambda bi, gi, wi: (bi, wi, gi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda bi, gi, wi: (bi, gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos2, live2, qg, kp, vp)
     return out.reshape(b, h, d)

@@ -1,53 +1,127 @@
 """Dispatching wrappers around the Pallas kernels.
 
-Model code calls these; the implementation is chosen by backend:
-  * ``tpu``  -> pl.pallas_call kernels (kernels/*.py)
-  * others   -> the pure-jnp references (kernels/ref.py)
-Tests force ``interpret=True`` to execute the kernel bodies on CPU.
+Model code calls these; the implementation is selected by a uniform
+``KernelType`` (the mamba-jax kernel-interface idiom):
 
-Set ``repro.kernels.ops.FORCE_IMPL`` to "jnp" | "pallas" | "interpret" to
-override (used by tests and the dry-run, which lowers for a 512-device CPU
-mesh where TPU kernels cannot lower).
+  * ``KernelType.PALLAS``    -> pl.pallas_call kernels (kernels/*.py)
+  * ``KernelType.XLA``       -> the pure-jnp reference oracles (ref.py)
+  * ``KernelType.INTERPRET`` -> the kernel bodies under the Pallas
+    interpreter on CPU (bit-identity tests)
+
+``kernel_type()`` resolves the active type: the ``FORCE_KERNEL``
+override wins (tests and the dry-run pin it — the dry-run lowers for a
+512-device CPU mesh where TPU kernels cannot lower), else PALLAS on TPU
+backends and XLA everywhere else.  ``force_kernel(...)`` scopes an
+override; enum members or their string names ("pallas" / "xla" / "jnp" /
+"interpret") both coerce.  Every kernel keeps a bit-identical oracle:
+INTERPRET output equals the jitted reference.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import contextlib
+import enum
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 
-FORCE_IMPL: Optional[str] = None
+
+class KernelType(enum.Enum):
+    """Which implementation of a kernel op runs: the compiled Pallas
+    kernel, the XLA reference oracle, or the kernel body interpreted on
+    CPU (how tests pin bit-identity without a TPU)."""
+
+    PALLAS = "pallas"
+    XLA = "xla"
+    INTERPRET = "interpret"
+
+    @classmethod
+    def coerce(cls, value: Union["KernelType", str]) -> "KernelType":
+        if isinstance(value, cls):
+            return value
+        try:
+            return _KERNEL_TYPE_NAMES[str(value).lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown kernel type {value!r}; expected one of "
+                f"{sorted(_KERNEL_TYPE_NAMES)}") from None
+
+
+# "jnp" stays accepted as an alias of the XLA reference path (the name
+# the pre-enum string dispatch used).
+_KERNEL_TYPE_NAMES = {
+    "pallas": KernelType.PALLAS,
+    "xla": KernelType.XLA,
+    "jnp": KernelType.XLA,
+    "interpret": KernelType.INTERPRET,
+}
+
+# Global dispatch override; prefer the force_kernel() context manager.
+FORCE_KERNEL: Optional[KernelType] = None
 
 # Cached jax.devices() platform lookup: every op invocation used to call
 # jax.devices() (which grabs a lock and builds the device list) just to
 # re-learn the backend.  The platform cannot change within a process, so
-# resolve it once; FORCE_IMPL keeps its override semantics because it is
-# consulted BEFORE the cache on every call (tests flip it at runtime).
+# resolve it once; FORCE_KERNEL keeps its override semantics because it
+# is consulted BEFORE the cache on every call (tests flip it at runtime).
 _PLATFORM: Optional[str] = None
 
 
-def _impl() -> str:
+def kernel_type() -> KernelType:
+    """The KernelType every op dispatches on for the current call."""
     global _PLATFORM
-    if FORCE_IMPL is not None:
-        return FORCE_IMPL
+    if FORCE_KERNEL is not None:
+        return KernelType.coerce(FORCE_KERNEL)
     if _PLATFORM is None:
         try:
             _PLATFORM = jax.devices()[0].platform
         except RuntimeError:
             _PLATFORM = "cpu"
-    return "pallas" if _PLATFORM == "tpu" else "jnp"
+    return KernelType.PALLAS if _PLATFORM == "tpu" else KernelType.XLA
+
+
+@contextlib.contextmanager
+def force_kernel(kind: Optional[Union[KernelType, str]]):
+    """Scope a dispatch override (None clears any active override)."""
+    global FORCE_KERNEL
+    prev = FORCE_KERNEL
+    FORCE_KERNEL = None if kind is None else KernelType.coerce(kind)
+    try:
+        yield
+    finally:
+        FORCE_KERNEL = prev
+
+
+def _kernel_args() -> Optional[dict]:
+    """None -> run the XLA oracle; else the kwargs for the kernel call."""
+    kt = kernel_type()
+    if kt is KernelType.XLA:
+        return None
+    return {"interpret": kt is KernelType.INTERPRET}
 
 
 def berrut_apply(weights: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
-    impl = _impl()
-    if impl in ("pallas", "interpret"):
+    kw = _kernel_args()
+    if kw is not None:
         from repro.kernels import berrut_matmul
-        return berrut_matmul.berrut_apply(
-            weights, x, interpret=impl == "interpret")
+        return berrut_matmul.berrut_apply(weights, x, **kw)
     return ref.berrut_apply_ref(weights, x)
+
+
+def berrut_encode_dispatch(weights: jnp.ndarray,
+                           x: jnp.ndarray) -> jnp.ndarray:
+    """One-pass encode -> worker-major dispatch: (O, I) @ (G, I, F) ->
+    (O*G, F) flat streams in the ``n*G + g`` order the "worker" mesh
+    axis shards (DESIGN.md §13) — the encode contraction and the stream
+    layout move fused into one HBM pass."""
+    kw = _kernel_args()
+    if kw is not None:
+        from repro.kernels import berrut_matmul
+        return berrut_matmul.berrut_encode_dispatch(weights, x, **kw)
+    return ref.berrut_encode_dispatch_ref(weights, x)
 
 
 def fused_group_decode(grouped: jnp.ndarray, masks: jnp.ndarray,
@@ -58,12 +132,11 @@ def fused_group_decode(grouped: jnp.ndarray, masks: jnp.ndarray,
     vote-coordinate gather when ``c_vote > 0``) in one pass over the
     coded-logit block.  masks: (N+1,) shared or (G, N+1) per-group.
     """
-    impl = _impl()
-    if impl in ("pallas", "interpret"):
+    kw = _kernel_args()
+    if kw is not None:
         from repro.kernels import berrut_decode
         return berrut_decode.fused_group_decode(
-            grouped, masks, alphas, betas, c_vote=c_vote,
-            interpret=impl == "interpret")
+            grouped, masks, alphas, betas, c_vote=c_vote, **kw)
     return ref.fused_group_decode_ref(grouped, masks, alphas, betas,
                                       c_vote=c_vote)
 
@@ -77,13 +150,12 @@ BLOCKED_THRESHOLD = 8192
 
 def attention(q, k, v, *, causal=True, window=None, prefix=0, softcap=0.0,
               q_offset=0, unroll=False):
-    impl = _impl()
-    if impl in ("pallas", "interpret"):
+    kw = _kernel_args()
+    if kw is not None:
         from repro.kernels import flash_attention
         return flash_attention.flash_attention(
             q, k, v, causal=causal, window=window, prefix=prefix,
-            softcap=softcap, q_offset=q_offset,
-            interpret=impl == "interpret")
+            softcap=softcap, q_offset=q_offset, **kw)
     use_blocked = (ATTN_IMPL == "blocked"
                    or (ATTN_IMPL == "auto"
                        and k.shape[1] >= BLOCKED_THRESHOLD))
@@ -104,12 +176,12 @@ def decode_attention(q, k_cache, v_cache, kv_mask, *, softcap=0.0,
     bytes); the jnp path dequantises up front (XLA materialises the copy —
     the proxy-vs-target divergence recorded in EXPERIMENTS.md §5.3).
     """
-    impl = _impl()
-    if impl in ("pallas", "interpret"):
+    kw = _kernel_args()
+    if kw is not None:
         from repro.kernels import flash_decode
         return flash_decode.flash_decode(
             q, k_cache, v_cache, kv_mask, softcap=softcap,
-            kv_scale=kv_scale, interpret=impl == "interpret")
+            kv_scale=kv_scale, **kw)
     if kv_scale > 0.0:
         k_cache = k_cache.astype(jnp.float32) / kv_scale
         v_cache = v_cache.astype(jnp.float32) / kv_scale
@@ -118,13 +190,45 @@ def decode_attention(q, k_cache, v_cache, kv_mask, *, softcap=0.0,
                                     softcap=softcap)
 
 
+def pool_decode_attention(q, k_cache, v_cache, pos, live=None, *,
+                          softcap=0.0, kv_scale=0.0):
+    """Slot-pool decode attention: per-stream (B,) ring positions and an
+    optional (B,) slot-live mask instead of a materialised (B, W) mask.
+
+    The Pallas kernel derives every KV tile's validity in-kernel from the
+    SMEM-resident scalars (``kvpos <= pos`` composed with ``live``) — no
+    full-width masked score block.  The XLA path keeps the pre-kernel
+    program byte-for-byte: it builds the positional mask exactly as
+    ``models.attention.attention_decode`` used to and runs
+    ``decode_attention_ref`` (for a live row the composed mask equals the
+    positional mask, so threading ``live`` changes nothing on live rows;
+    an all-dead row is garbage on both paths — uniform-softmax garbage
+    here, zeros in the kernel — and callers must mask it downstream).
+    """
+    kw = _kernel_args()
+    if kw is not None:
+        from repro.kernels import flash_decode
+        return flash_decode.pool_flash_decode(
+            q, k_cache, v_cache, pos, live, softcap=softcap,
+            kv_scale=kv_scale, **kw)
+    w = k_cache.shape[1]
+    valid = jnp.arange(w)[None, :] <= jnp.asarray(pos, jnp.int32)[:, None]
+    if live is not None:
+        valid = jnp.logical_and(valid, (live > 0)[:, None])
+    if kv_scale > 0.0:
+        k_cache = k_cache.astype(jnp.float32) / kv_scale
+        v_cache = v_cache.astype(jnp.float32) / kv_scale
+    return ref.decode_attention_ref(q, k_cache.astype(q.dtype),
+                                    v_cache.astype(q.dtype), valid,
+                                    softcap=softcap)
+
+
 def ssd(x, dt, a_log, b, c, d_skip, h0=None, chunk: int = 128):
-    impl = _impl()
-    if impl in ("pallas", "interpret"):
+    kw = _kernel_args()
+    if kw is not None:
         from repro.kernels import ssd_scan
         return ssd_scan.ssd_chunked(
-            x, dt, a_log, b, c, d_skip, h0=h0, chunk=chunk,
-            interpret=impl == "interpret")
+            x, dt, a_log, b, c, d_skip, h0=h0, chunk=chunk, **kw)
     return ref.ssd_chunked_ref(x, dt, a_log, b, c, d_skip, h0=h0, chunk=chunk)
 
 

@@ -27,6 +27,22 @@ def berrut_apply_ref(weights: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
                       x.astype(jnp.float32)).astype(x.dtype)
 
 
+def berrut_encode_dispatch_ref(weights: jnp.ndarray,
+                               x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for ``berrut_matmul.berrut_encode_dispatch``.
+
+    Encode + worker-major stream layout in one definition: the (O, I)
+    Berrut contraction over (G, I, F) followed by the flat ``n*G + g``
+    stream ordering the "worker" mesh axis shards (DESIGN.md §13).
+    Composing ``berrut_apply_ref`` with the swapaxes/reshape keeps this
+    byte-identical to the pre-fused two-pass path — the layout move is
+    free here (XLA relayouts on the copy) while the kernel writes each
+    output tile straight into the worker-major block.
+    """
+    coded = berrut_apply_ref(weights, x)                  # (G, O, F)
+    return jnp.swapaxes(coded, 0, 1).reshape(-1, x.shape[-1])
+
+
 def fused_group_decode_ref(grouped: jnp.ndarray, masks: jnp.ndarray,
                            alphas: jnp.ndarray, betas: jnp.ndarray, *,
                            c_vote: int = 0):
@@ -137,6 +153,74 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
     scores = jnp.where(kv_mask[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrw,bwgd->bgrd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def pool_decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                              v_cache: jnp.ndarray, pos: jnp.ndarray,
+                              live: Optional[jnp.ndarray] = None, *,
+                              softcap: float = 0.0,
+                              kv_scale: float = 0.0,
+                              block: int = 512) -> jnp.ndarray:
+    """Oracle for ``flash_decode.pool_flash_decode`` (slot-pool decode).
+
+    Blocked online-softmax in the kernel's exact op order — same tile
+    width, same masked-exp/rescale sequence, same ``acc / max(l, 1e-30)``
+    finalisation — so the interpreted kernel matches bitwise.  The mask
+    is never materialised at (B, W): each tile derives validity from the
+    per-stream ``pos`` ring positions (``kvpos <= pos`` — the live
+    ring-buffer slots of DESIGN.md §10) composed with the optional
+    per-stream ``live`` slot mask.  A fully-dead row (live == 0) returns
+    zeros (l stays 0), unlike ``decode_attention_ref``'s uniform-softmax
+    garbage on an all-false mask row.
+
+    q: (B, H, D); caches: (B, W, KV, D); pos: (B,) int32; live: (B,).
+    ``kv_scale`` > 0 dequantises int8 caches per tile, as the kernel does.
+    """
+    b, h, d = q.shape
+    w, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    scale = 1.0 / (d ** 0.5)
+    pad_w = (-w) % block
+    kp = jnp.pad(k_cache, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+    nb = (w + pad_w) // block
+    qg = q.reshape(b, kv, rep, d).astype(jnp.float32) * scale
+    pos = jnp.asarray(pos, jnp.int32)
+    kb = jnp.moveaxis(kp.reshape(b, nb, block, kv, d), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(b, nb, block, kv, d), 1, 0)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, bi = xs
+        kf = k_blk.astype(jnp.float32)
+        vf = v_blk.astype(jnp.float32)
+        if kv_scale > 0.0:
+            kf = kf / kv_scale
+            vf = vf / kv_scale
+        s = jnp.einsum("bgrd,btgd->bgrt", qg, kf)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        kvpos = bi * block + jnp.arange(block)[None, :]   # (1, T)
+        ok = jnp.logical_and(kvpos <= pos[:, None], kvpos < w)
+        if live is not None:
+            ok = jnp.logical_and(ok, (live > 0)[:, None])
+        okb = ok[:, None, None, :]                        # (B,1,1,T)
+        s = jnp.where(okb, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(okb, p, 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+        l_new = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bgrt,btgd->bgrd", p, vf)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, kv, rep, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, rep, 1), jnp.float32),
+            jnp.zeros((b, kv, rep, d), jnp.float32))
+    (_, lsum, acc), _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(lsum, 1e-30)
     return out.reshape(b, h, d).astype(q.dtype)
 
 

@@ -5,7 +5,11 @@ ApproxIFER's premise is that the N+1 coded queries of a group run on
 (``launch.mesh.make_worker_mesh``).  Coded streams are laid out
 **worker-major** — the flat stream axis is ``(N+1, G)`` flattened, so a
 contiguous 1/W slice of it is exactly the streams owned by one worker
-rank — and the decode tail gathers **only survivor shards**:
+rank.  The encode side produces this layout directly:
+``ops.berrut_encode_dispatch`` fuses the Berrut contraction with the
+per-rank stream order in one HBM pass (no post-encode swapaxes), so
+sharding the streams over the "worker" axis is a constraint, not a
+copy.  The decode tail gathers **only survivor shards**:
 
   1. every rank scatters its local streams into a ``(width, G, V)``
      buffer at their survivor-compacted slot (non-survivors are dropped),

@@ -10,7 +10,7 @@ Covers the attention flavours of every assigned architecture:
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -156,7 +156,8 @@ def attention_prefill(cfg: ModelConfig, p: dict, x: jnp.ndarray,
 
 
 def attention_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
-                     pos: jnp.ndarray, cache: dict
+                     pos: jnp.ndarray, cache: dict,
+                     live: Optional[jnp.ndarray] = None
                      ) -> Tuple[jnp.ndarray, dict]:
     """One-token decode: x (B, 1, d), pos scalar int32 (shared position)
     or (B,) int32 per-stream positions (slot-pool continuous batching,
@@ -164,9 +165,15 @@ def attention_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     different cache depths).
 
     Writes the new KV at slot pos % width and attends over valid slots.
+    The per-stream branch never materialises a (B, W) validity mask: it
+    hands the position vector (and the optional (B,) ``live`` slot mask
+    of the coded pool) to ``ops.pool_decode_attention``, which derives
+    tile validity in-kernel on the Pallas path.  ``live`` is ignored in
+    the scalar-pos branch (one shared depth has no dead slots).
     """
     pos = jnp.asarray(pos, jnp.int32)
     w = cache["k"].shape[1]
+    kv_scale = (INT8_KV_SCALE if cache["k"].dtype == jnp.int8 else 0.0)
     if pos.ndim == 0:
         q, k, v = _qkv(cfg, p, x, pos[None])
         slot = jnp.mod(pos, w)
@@ -176,6 +183,9 @@ def attention_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
             cache["v"], quantize_kv(cfg, v, cache["v"].dtype), slot, axis=1)
         valid = jnp.arange(w)[None, :] <= pos             # (1, W) -> (B, W)
         valid = jnp.broadcast_to(valid, (x.shape[0], w))
+        out = ops.decode_attention(q[:, 0], new_k, new_v, valid,
+                                   softcap=cfg.attn_logit_softcap,
+                                   kv_scale=kv_scale)
     else:
         # Per-stream ring slots: a batched scatter replaces the shared
         # dynamic_update_slice (each stream writes at its own depth,
@@ -187,10 +197,9 @@ def attention_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
             quantize_kv(cfg, k, cache["k"].dtype)[:, 0])
         new_v = cache["v"].at[rows, slot].set(
             quantize_kv(cfg, v, cache["v"].dtype)[:, 0])
-        valid = jnp.arange(w)[None, :] <= pos[:, None]
-    kv_scale = INT8_KV_SCALE if new_k.dtype == jnp.int8 else 0.0
-    out = ops.decode_attention(q[:, 0], new_k, new_v, valid,
-                               softcap=cfg.attn_logit_softcap,
-                               kv_scale=kv_scale)
+        out = ops.pool_decode_attention(q[:, 0], new_k, new_v, pos,
+                                        live=live,
+                                        softcap=cfg.attn_logit_softcap,
+                                        kv_scale=kv_scale)
     out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
     return out, {"k": new_k, "v": new_v}

@@ -163,10 +163,14 @@ def prefill(cfg: ModelConfig, params: dict, inputs: dict, caches: list
 
 
 def decode_step(cfg: ModelConfig, params: dict, caches: list, inputs: dict,
-                pos: jnp.ndarray) -> Tuple[jnp.ndarray, list]:
+                pos: jnp.ndarray,
+                live: jnp.ndarray = None) -> Tuple[jnp.ndarray, list]:
     """One decode step.  inputs: {"tokens": (B,1)} or {"embeddings":
     (B,1,d)}; pos: scalar int32 current position, or (B,) int32 per-stream
-    positions (slot-pool continuous batching, DESIGN.md §10).
+    positions (slot-pool continuous batching, DESIGN.md §10); live:
+    optional (B,) slot-live mask handed to the pool attention kernel
+    (dead streams' attention tiles are skipped in-kernel — their rows
+    are garbage either way and must be masked downstream).
     -> (logits (B,V), caches).
     """
     if "embeddings" in inputs:
@@ -175,7 +179,7 @@ def decode_step(cfg: ModelConfig, params: dict, caches: list, inputs: dict,
         x = layers.embed_tokens(cfg, params["embeddings"], inputs["tokens"])
     x = shard(x, "batch", None, None)
     x, caches = transformer.decode_runs(cfg, params["blocks"], x, pos,
-                                        caches)
+                                        caches, live=live)
     x = layers.apply_norm(cfg, params["final_norm"], x)
     logits = layers.unembed(cfg, params["embeddings"], x)[:, 0]
     return logits.astype(jnp.float32), caches

@@ -165,13 +165,17 @@ def block_prefill(cfg: ModelConfig, kind: str, p: dict, x, positions, cache):
     return x + y, new_cache
 
 
-def block_decode(cfg: ModelConfig, kind: str, p: dict, x, pos, cache):
+def block_decode(cfg: ModelConfig, kind: str, p: dict, x, pos, cache,
+                 live=None):
     if kind == "S":
+        # SSM state has no positional ring mask — ``live`` only gates
+        # attention tiles; dead slots' SSM garbage is masked downstream.
         y, new_cache = mamba2.mamba2_decode(
             cfg, p["ssm"], layers.apply_norm(cfg, p["norm"], x), cache)
         return x + y, new_cache
     att, new_cache = attention.attention_decode(
-        cfg, p["attn"], layers.apply_norm(cfg, p["norm1"], x), pos, cache)
+        cfg, p["attn"], layers.apply_norm(cfg, p["norm1"], x), pos, cache,
+        live=live)
     x = x + att
     h = layers.apply_norm(cfg, p["norm2"], x)
     if kind == "M":
@@ -236,20 +240,20 @@ def prefill_runs(cfg: ModelConfig, blocks: dict, x, positions, caches):
     return x, new_caches
 
 
-def decode_runs(cfg: ModelConfig, blocks: dict, x, pos, caches):
+def decode_runs(cfg: ModelConfig, blocks: dict, x, pos, caches, live=None):
     new_caches = []
     for (kind, count), run_p, cache in zip(
             pattern_runs(cfg.layer_pattern), blocks["runs"], caches):
         if kind == "G":
             x, nc = _scan(
                 cfg, lambda h, c: block_decode(cfg, "A", blocks["shared"], h,
-                                               pos, c), x, cache)
+                                               pos, c, live=live), x, cache)
             new_caches.append(nc)
             continue
 
         def body(h, pc, _kind=kind):
             lp, c = pc
-            return block_decode(cfg, _kind, lp, h, pos, c)
+            return block_decode(cfg, _kind, lp, h, pos, c, live=live)
 
         x, nc = _scan(cfg, body, x, (run_p, cache))
         new_caches.append(nc)

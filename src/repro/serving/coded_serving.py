@@ -54,18 +54,21 @@ def _code_streams(coding: CodingConfig, x: jnp.ndarray,
     # G is tiny; parallelise the coding contraction over the feature axis
     # (full mesh), then reshard to the batch layout.
     flat = shard(flat, None, None, "coded_flat")
-    coded = ops.berrut_apply(w, flat)                     # (G, N+1, F)
-    coded = shard(coded, None, None, "coded_flat")
     if worker_major:
-        coded = jnp.swapaxes(coded, 0, 1)                 # (N+1, G, F)
-        coded = coded.reshape(g * coding.num_workers, *x.shape[2:])
-        if num_padded_streams(coding, g) != coded.shape[0]:
+        if num_padded_streams(coding, g) != g * coding.num_workers:
             raise ValueError(
                 "worker-major coded streams cannot be padded: "
-                f"{coded.shape[0]} streams vs mesh batch product "
+                f"{g * coding.num_workers} streams vs mesh batch product "
                 f"{num_padded_streams(coding, g)} (make N+1 divisible "
                 "by the worker axis)")
+        # One-pass encode->dispatch: the kernel writes each coded tile
+        # straight into the flat ``n*G + g`` per-rank layout — no
+        # post-encode swapaxes/reshape pass over the coded block.
+        coded = ops.berrut_encode_dispatch(w, flat)       # ((N+1)*G, F)
+        coded = coded.reshape(g * coding.num_workers, *x.shape[2:])
         return shard(coded, "batch", *([None] * (coded.ndim - 1)))
+    coded = ops.berrut_apply(w, flat)                     # (G, N+1, F)
+    coded = shard(coded, None, None, "coded_flat")
     coded = coded.reshape(g * coding.num_workers, *x.shape[2:])
     pad = num_padded_streams(coding, g) - coded.shape[0]
     if pad:
@@ -622,8 +625,20 @@ def coded_pool_decode_step(cfg: ModelConfig, coding: CodingConfig,
         # padding streams duplicate stream 0 — track its position too
         stream_pos = jnp.concatenate(
             [stream_pos, jnp.broadcast_to(stream_pos[:1], (pad,))])
+    # With E == 0 the locator never reads the coded block (the decode
+    # masks broadcast the straggler availability), so a free slot's
+    # attention output feeds nothing but the rows `_finish_pool_round`
+    # zeroes — the slot-live mask can ride into the attention kernel,
+    # which then skips dead streams' KV tiles, and live rows stay
+    # byte-identical.  With E > 0 the cross-group vote pool DOES read
+    # every row's logits, so the free-slot garbage must stay exactly
+    # what the pre-kernel program produced: live stays None there.
+    stream_live = (_stream_mask(coding, active_mask, coded.shape[0],
+                                worker_major=wm)
+                   if coding.e == 0 else None)
     coded_logits, caches = decode_step(cfg, params, state.caches,
-                                       {"embeddings": coded}, stream_pos)
+                                       {"embeddings": coded}, stream_pos,
+                                       live=stream_live)
     coded_logits = _real_streams(coding, coded_logits, g)
     if byz_mask is not None and byz_rng is not None:
         coded_logits = _corrupt_logits(coding, coded_logits, byz_mask,

@@ -21,6 +21,11 @@ round loop over a fixed-capacity slot pool:
     ``max_new_tokens``; a group's slots free when its last request
     retires, and freed slots are handed to queued groups on the next
     round.
+  * Every stream decodes at its own cache depth (the per-slot ``pos``
+    vector); the decode step hands those depths — and, for E == 0
+    pools, the slot-live mask — to ``ops.pool_decode_attention``, whose
+    Pallas kernel derives KV-tile validity in-kernel, so the pool never
+    materialises a (streams, width) mask or full-width masked scores.
 
 Every pool round is one coded dispatch: per-worker completion times are
 sampled once, the round fires when the fastest ``wait_for`` coded

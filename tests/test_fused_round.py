@@ -102,15 +102,11 @@ class TestFusedKernelVsRef:
         masks = jnp.ones((2, cfg.num_workers), jnp.float32)
         alphas = jnp.asarray(cfg.alphas, jnp.float32)
         betas = jnp.asarray(cfg.betas, jnp.float32)
-        old = ops.FORCE_IMPL
-        try:
-            ops.FORCE_IMPL = "interpret"
+        with ops.force_kernel(ops.KernelType.INTERPRET):
             a = ops.fused_group_decode(x, masks, alphas, betas)
-            ops.FORCE_IMPL = "jnp"
+        with ops.force_kernel(ops.KernelType.XLA):
             b = jax.jit(lambda *t: ops.fused_group_decode(*t))(
                 x, masks, alphas, betas)
-        finally:
-            ops.FORCE_IMPL = old
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -307,15 +303,24 @@ class TestLocatorQualityHighKE:
 
 
 class TestImplCache:
-    def test_force_impl_overrides_cached_platform(self):
-        old = ops.FORCE_IMPL
-        try:
-            ops.FORCE_IMPL = None
-            first = ops._impl()
+    def test_force_kernel_overrides_cached_platform(self):
+        with ops.force_kernel(None):
+            first = ops.kernel_type()
             assert ops._PLATFORM is not None      # lookup now cached
-            ops.FORCE_IMPL = "interpret"          # override still wins
-            assert ops._impl() == "interpret"
-            ops.FORCE_IMPL = None
-            assert ops._impl() == first
-        finally:
-            ops.FORCE_IMPL = old
+            with ops.force_kernel(ops.KernelType.INTERPRET):
+                # override still wins over the cached platform
+                assert ops.kernel_type() is ops.KernelType.INTERPRET
+            assert ops.kernel_type() is first
+
+    def test_string_names_coerce_to_kernel_types(self):
+        assert ops.KernelType.coerce("pallas") is ops.KernelType.PALLAS
+        assert ops.KernelType.coerce("xla") is ops.KernelType.XLA
+        # the pre-enum dispatch name stays accepted
+        assert ops.KernelType.coerce("jnp") is ops.KernelType.XLA
+        assert ops.KernelType.coerce("interpret") is ops.KernelType.INTERPRET
+        assert (ops.KernelType.coerce(ops.KernelType.PALLAS)
+                is ops.KernelType.PALLAS)
+        with pytest.raises(ValueError):
+            ops.KernelType.coerce("cuda")
+        with ops.force_kernel("interpret"):
+            assert ops.kernel_type() is ops.KernelType.INTERPRET
